@@ -1,0 +1,37 @@
+"""Beyond-paper analysis: context-weighted interference robustness (EXPERIMENTS §Beyond).
+
+The paper's Formula 2 premise says interference depends only on group SIZE.  Real
+batched decode also pays for every resident sequence's KV bytes, so co-locating
+long-context tails is costly even in small groups.  This bench runs the same systems
+under the context-weighted data plane and quantifies how each placement degrades —
+motivating the work-aware DP cost and migration load-feedback gates we add.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Workbench, emit
+
+
+def run(fast: bool = True):
+    rows = []
+    n_prompts, workers = (150, 24) if fast else (400, 64)
+    wb = Workbench.make("coding", n_prompts=n_prompts, group_size=16)
+    for tag, ctx, kvr in (("premise_true", 0.0, 0.01), ("ctx_weighted", 1.0e-6, 0.008)):
+        results = {}
+        for placement in ("heddle", "least_load", "cache_aware"):
+            r = wb.run(scheduler="pps", placement=placement, degrees=(1,) * workers,
+                       gpu_budget=workers, max_batch=100, seed=0,
+                       ctx_interference=ctx, kv_weight_ratio=kvr)
+            results[placement] = r
+            rows.append((f"beyond/{tag}/{placement}", r.makespan * 1e6,
+                         f"{r.throughput:.0f}tok/s"))
+        for base in ("least_load", "cache_aware"):
+            sp = results[base].makespan / results["heddle"].makespan
+            rows.append((f"beyond/{tag}/speedup_vs_{base}", 0.0, f"{sp:.2f}x"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

@@ -1,0 +1,38 @@
+"""Figure 12: end-to-end rollout throughput — Heddle vs Verl / Verl* / Slime.
+
+Paper claim: 1.4x-2.3x over Verl, 1.1x-2.4x over Verl*, 1.2x-2.5x over Slime, gains
+amplifying with model scale (larger models -> heavier interference factor).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import MODEL_SCALES, TASKS, Workbench, emit, system_configs
+
+
+def run(fast: bool = True):
+    rows = []
+    tasks = ("coding",) if fast else TASKS
+    scales = {"qwen3-14b": MODEL_SCALES["qwen3-14b"]} if fast else MODEL_SCALES
+    for task in tasks:
+        wb = Workbench.make(task, n_prompts=32 if fast else 64)
+        for model, t1 in scales.items():
+            # interference slope scales with model KV footprint (paper Fig. 6: larger
+            # models -> heavier contention); base = the calibrated 14B slope
+            kvr = 0.01 * (t1 / 0.02)
+            results = {}
+            for name, cfg in system_configs().items():
+                r = wb.run(base_token_time=t1, kv_weight_ratio=kvr, seed=0, **cfg)
+                results[name] = r
+                rows.append((f"fig12/{task}/{model}/{name}", r.makespan * 1e6,
+                             f"{r.throughput:.0f}tok/s"))
+            for base in ("verl", "verl_star", "slime"):
+                sp = results[base].makespan / results["heddle"].makespan
+                rows.append((f"fig12/{task}/{model}/speedup_vs_{base}", 0.0,
+                             f"{sp:.2f}x"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

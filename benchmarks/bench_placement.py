@@ -1,0 +1,37 @@
+"""Figure 15: trajectory-aware placement — Heddle (presorted DP + migration) vs
+least-load and cache-aware routing.  Paper claim: 1.2x-1.5x throughput.
+
+Placement is isolated: PPS scheduling and homogeneous MP for all variants.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Workbench, emit
+
+
+def run(fast: bool = True):
+    rows = []
+    n_prompts, workers = (150, 24) if fast else (400, 64)
+    wb = Workbench.make("coding", n_prompts=n_prompts, group_size=16)
+    results = {}
+    for placement in ("heddle", "least_load", "cache_aware"):
+        r = wb.run(scheduler="pps", placement=placement,
+                   degrees=(1,) * workers, gpu_budget=workers, max_batch=100, seed=0)
+        results[placement] = r
+        rows.append((f"fig15/{placement}", r.makespan * 1e6,
+                     f"{r.throughput:.0f}tok/s mig={r.migrations}"))
+    for base in ("least_load", "cache_aware"):
+        sp = results[base].makespan / results["heddle"].makespan
+        rows.append((f"fig15/speedup_vs_{base}", 0.0, f"{sp:.2f}x"))
+    # migration ablation: Heddle placement without runtime migration
+    r = wb.run(scheduler="pps", placement="heddle", migration=False,
+               degrees=(1,) * workers, gpu_budget=workers, max_batch=100, seed=0)
+    rows.append(("fig15/heddle_no_migration", r.makespan * 1e6,
+                 f"{r.throughput:.0f}tok/s"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

@@ -1,0 +1,59 @@
+"""Figure 13: progressive trajectory prediction precision (recall of long-tail set,
+Pearson r) vs model-based and history-based prompt-only baselines.
+
+Paper claim: Heddle > baselines on both metrics; Heddle-2 (after step 2) > Heddle-1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TASKS, emit
+from repro.core.predictor import (HistoryPredictor, ModelPredictor,
+                                  ProgressivePredictor, long_tail_recall, pearson)
+from repro.core.trajectory import Trajectory
+from repro.engine.workload import WorkloadConfig, generate, replay_finished
+
+
+def _replay_at(t: Trajectory, k: int) -> Trajectory:
+    r = Trajectory(prompt_id=t.prompt_id, sample_id=t.sample_id,
+                   prompt_tokens=t.prompt_tokens, context_tokens=t.prompt_tokens)
+    for st in t.steps[:k]:
+        r.record_step(st)
+        r.record_tool_output(st.tool_output_tokens)
+    return r
+
+
+def run(fast: bool = True):
+    rows = []
+    tasks = ("coding",) if fast else TASKS
+    for task in tasks:
+        train = replay_finished(generate(WorkloadConfig(task=task, n_prompts=48,
+                                                        group_size=8, seed=1)))
+        test = replay_finished(generate(WorkloadConfig(task=task, n_prompts=32,
+                                                       group_size=16, seed=2)))
+        pp = ProgressivePredictor().fit_trajectories(train)
+        hp = HistoryPredictor().fit_trajectories(train)
+        mp = ModelPredictor().fit_trajectories(train)
+        true = np.array([t.true_total_tokens for t in test], float)
+
+        preds = {
+            "history": np.array([hp.predict(_replay_at(t, 0)) for t in test]),
+            "model": np.array([mp.predict(_replay_at(t, 0)) for t in test]),
+        }
+        for k in (1, 2):
+            reps = [_replay_at(t, min(k, t.true_num_steps)) for t in test]
+            preds[f"heddle-{k}"] = np.array(
+                [r.tokens_generated + pp.predict(r) for r in reps])
+        for name, p in preds.items():
+            rows.append((f"fig13/{task}/{name}/recall", 0.0,
+                         f"{long_tail_recall(p, true):.3f}"))
+            rows.append((f"fig13/{task}/{name}/pearson", 0.0,
+                         f"{pearson(p, true):.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

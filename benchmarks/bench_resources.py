@@ -1,0 +1,42 @@
+"""Figure 16: trajectory-adaptive resource management — Algorithm 2 vs Fix-1 / Fix-8
+homogeneous MP.  Paper claim: 1.1x-1.3x; Fix-1 has peak initial throughput but slow
+long-tail per-token time, Fix-8 the reverse (16b: active-trajectory timeline).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Workbench, emit
+
+
+def run(fast: bool = True):
+    rows = []
+    n_prompts = 150 if fast else 400
+    wb = Workbench.make("search", n_prompts=n_prompts, group_size=16)
+    results = {}
+    variants = {
+        "adaptive": dict(degrees=()),                    # Algorithm 2
+        "fix1": dict(degrees=(1,) * 64),
+        "fix8": dict(degrees=(8,) * 8),
+    }
+    for name, extra in variants.items():
+        r = wb.run(scheduler="pps", placement="heddle", gpu_budget=64,
+                   max_batch=100, seed=0, **extra)
+        results[name] = r
+        rows.append((f"fig16/{name}", r.makespan * 1e6, f"{r.throughput:.0f}tok/s"))
+        # Fig 16(b): active-trajectory count over time (head/mid/tail of the timeline)
+        if r.timeline:
+            for frac in (0.25, 0.5, 0.9):
+                idx = min(int(len(r.timeline) * frac), len(r.timeline) - 1)
+                t, n = r.timeline[idx]
+                rows.append((f"fig16b/{name}/t{int(frac*100)}", t * 1e6,
+                             f"{n}active"))
+    for base in ("fix1", "fix8"):
+        sp = results[base].makespan / results["adaptive"].makespan
+        rows.append((f"fig16/speedup_vs_{base}", 0.0, f"{sp:.2f}x"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

@@ -1,0 +1,33 @@
+"""Figure 14: trajectory-level scheduling — PPS vs FCFS / RR / Autellix(SJF).
+
+Measures end-to-end rollout time and the cumulative queueing delay of the longest
+trajectory (paper: 1.1x-1.26x rollout-time reduction, driven by queueing delay).
+Scheduler is isolated: placement fixed to Heddle's DP, homogeneous MP, and worker slots
+scarce enough that queueing actually occurs (trajectories/worker > max_batch).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Workbench, emit
+
+
+def run(fast: bool = True):
+    rows = []
+    wb = Workbench.make("coding", n_prompts=48, group_size=16)
+    results = {}
+    for sched in ("pps", "fcfs", "rr", "sjf"):
+        r = wb.run(scheduler=sched, placement="heddle", migration=False,
+                   degrees=(1,) * 16, gpu_budget=16, max_batch=24, seed=0)
+        results[sched] = r
+        rows.append((f"fig14/{sched}/rollout_time", r.makespan * 1e6,
+                     f"qd_longest={r.queue_delay_p100:.1f}s"))
+    for sched in ("fcfs", "rr", "sjf"):
+        sp = results[sched].makespan / results["pps"].makespan
+        rows.append((f"fig14/speedup_vs_{sched}", 0.0, f"{sp:.2f}x"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=False)

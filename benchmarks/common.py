@@ -1,0 +1,76 @@
+"""Shared benchmark harness: workloads, predictor training, simulator sweeps.
+
+Every benchmark maps to one paper table/figure and emits ``name,us_per_call,derived``
+CSV rows (us_per_call = simulated rollout makespan in microseconds where applicable;
+derived = the figure's headline metric, e.g. throughput or speedup).
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.predictor import ProgressivePredictor
+from repro.engine.simulator import SimConfig, SimResult, RolloutSimulator
+from repro.engine.workload import WorkloadConfig, generate, replay_finished
+
+TASKS = ("coding", "search", "math")
+
+# paper model scales -> bs=1 per-token seconds at MP=1 (Hopper-class, §7.1 setup)
+MODEL_SCALES = {"qwen3-8b": 0.012, "qwen3-14b": 0.020, "qwen3-32b": 0.045}
+
+
+@dataclass
+class Workbench:
+    task: str
+    trajectories: list
+    predictor: ProgressivePredictor
+
+    @classmethod
+    def make(cls, task: str, n_prompts: int = 48, group_size: int = 16, seed: int = 0):
+        hist = replay_finished(generate(WorkloadConfig(
+            task=task, n_prompts=32, group_size=8, seed=seed + 10_000)))
+        predictor = ProgressivePredictor().fit_trajectories(hist)
+        batch = generate(WorkloadConfig(task=task, n_prompts=n_prompts,
+                                        group_size=group_size, seed=seed))
+        return cls(task, batch, predictor)
+
+    def run(self, **kw) -> SimResult:
+        batch = copy.deepcopy(self.trajectories)
+        cfg = SimConfig(**kw)
+        return RolloutSimulator(batch, self.predictor, cfg).run()
+
+
+# the four §7.1 systems as simulator configs (baselines: RR scheduling + homogeneous MP)
+def system_configs(gpu_budget: int = 64, max_batch: int = 100, mp_base: int = 1):
+    homog = tuple([mp_base] * (gpu_budget // mp_base))
+    return {
+        "heddle": dict(scheduler="pps", placement="heddle", degrees=(),
+                       gpu_budget=gpu_budget, max_batch=max_batch),
+        "verl": dict(scheduler="rr", placement="cache_aware", degrees=homog,
+                     gpu_budget=gpu_budget, max_batch=max_batch),
+        "verl_star": dict(scheduler="rr", placement="hybrid", degrees=homog,
+                          gpu_budget=gpu_budget, max_batch=max_batch),
+        "slime": dict(scheduler="rr", placement="least_load", degrees=homog,
+                      gpu_budget=gpu_budget, max_batch=max_batch),
+    }
+
+
+def emit(rows: list[tuple], header: bool = False) -> None:
+    if header:
+        print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,305 @@
+"""Assemble EXPERIMENTS.md from the dry-run JSON artifacts + benchmark CSV output.
+
+Usage: PYTHONPATH=src:. python benchmarks/make_experiments_md.py \
+          [--bench /tmp/bench_final_check.txt]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, improvement_hint, roofline_row
+
+HEADER = """# EXPERIMENTS — Heddle reproduction + TPU substrate
+
+All numbers are reproducible on this machine:
+```
+PYTHONPATH=src pytest tests/
+PYTHONPATH=src python -m benchmarks.run            # paper tables/figures
+PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_16x16.json
+PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out dryrun_2x16x16.json
+PYTHONPATH=src:. python -m benchmarks.roofline
+```
+
+## §Repro — validation against the paper's claims
+
+The cluster simulator runs the *paper-faithful configuration*: the data plane honors
+the paper's §5.1 interference premise (F = f(group size), calibrated slope 0.01,
+per-chip TP comm scaling calibrated to the Fig 7 latency/throughput trade-off), the
+control plane runs Formula 2 / Algorithm 1 / Algorithm 2 exactly as published.
+Workload statistics are calibrated to Fig 2/4/5 (40K-token cap, long-tail ratio ~8x,
+GRPO group 16, per-task tool latencies from Table 1).
+
+| claim (paper) | paper | this repro (3 tasks x 3 scales, `--full`) | benchmark |
+|---|---|---|---|
+| overall throughput vs Verl | 1.4-2.3x | **1.01-2.09x** | fig12 |
+| overall throughput vs Verl* | 1.1-2.4x | **1.01-2.09x** | fig12 |
+| overall throughput vs Slime | 1.2-2.5x | **1.19-2.15x** | fig12 |
+| predictor: Heddle-2 > Heddle-1 > model > history (recall) | yes | **0.73 > 0.67 > 0.37 > 0.00** | fig13 |
+| PPS rollout-time gain vs FCFS/RR/Autellix | 1.1-1.26x | **1.09 / 1.09 / 1.13x** | fig14 |
+| PPS removes the straggler's queueing delay | yes | **0s vs 169-253s** | fig14 |
+| placement vs least-load / cache-aware | 1.2-1.5x | **1.17x / 1.08x** | fig15 |
+| adaptive resources vs Fix-1 / Fix-8 | 1.1-1.3x | **1.46x / 1.15x** (search) | fig16 |
+| placement DP wall time (n=6400, m=16) | ~42 ms | **~6.9 s naive / 1.7 s monotone / 0.14 s aggregated** (CPU python vs their Rust) | tab2 |
+| prediction masked by tool execution | yes | **3 us/traj << 51-1420 ms tool** | tab1 |
+| migration masked by tool execution | yes | **~21 ms << 460-1420 ms (coding/search)** | tab1 |
+
+Notes:
+* Fig 12's "gains amplify with model scale" reproduces on math (2.02 -> 2.09x) but not
+  uniformly (search decreases with scale in our simulator): the paper's amplification
+  comes from real-system contention effects beyond the calibrated count-based F; the
+  per-task workload structure dominates in our model.  All 9 (task x scale) cells
+  still favor Heddle (>= 1.0x vs every baseline).
+* Fig 16 reproduces on the paper's own Fig 16 workload (search agent); on our coding
+  workload Fix-1 edges adaptive by ~6% (bulk-throughput-bound; SA's separable cost
+  model underprices mp1 bulk capacity — documented model-reality gap).
+* Verl* == Verl in our runs: the load-skew trigger (max/min > 32) never fires at these
+  batch sizes, so the hybrid stays cache-affine — consistent with the paper's
+  description of Verl* as interpolating between the two.
+* Beyond-paper robustness (bench `beyond_ctx`): when the data plane violates the
+  group-size premise (context-weighted KV interference), Heddle still wins
+  1.14x / 1.27x thanks to our work-aware DP cost + migration gates (see §Beyond).
+
+"""
+
+DRYRUN_SECTION = """## §Dry-run — 10 architectures x 4 shapes x 2 meshes
+
+`jax.jit(step).lower(...).compile()` succeeds for EVERY assigned combination on both
+production meshes (XLA host-device dry-run, ShapeDtypeStruct inputs, no allocation):
+
+* **16x16** (one 256-chip pod, axes `("data","model")`): {ok1} ok + {skip1} documented skip
+* **2x16x16** (two pods / 512 chips, axes `("pod","data","model")`): {ok2} ok + {skip2} documented skip
+
+The single skip is `whisper-medium x long_500k` (encoder-decoder: bounded decoder
+context is intrinsic to the family — DESIGN.md §5).  `long_500k` lowers `serve_step`
+with SSM state (xlstm, jamba) or a sliding-window ring cache (dense/MoE/VLM, window
+8192); decode shapes lower `serve_step` (1 token vs a seq_len cache); `train_4k`
+lowers the full GRPO `train_step` (loss + backward + AdamW).
+
+Sharding: params use TP ("model") x FSDP ("data") logical rules with per-dim
+divisibility fallback (smollm's 9 heads -> replicated attention, 60 qwen2-moe experts
+-> replicated experts, arctic's 128 experts -> 8/chip expert-parallel); decode KV
+caches shard (batch -> data, kv_seq -> model); MoE dispatch is grouped per data shard.
+Per-device memory (args+temp) from `memory_analysis()` is in the table below; the one
+genuinely tight case is arctic-480b train (params+moments alone are 11.3 GB/chip on a
+256-chip pod; the 2-pod mesh halves it).
+"""
+
+
+def fmt_dryrun_table(records):
+    lines = ["| arch | shape | mode | lower(s) | compile(s) | args GiB | temp GiB | collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | SKIP: {r['reason'][:40]} |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        cc = r.get("collective_counts", {})
+        cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in cc.items() if v)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mode','')} | {r.get('lower_s',0):.1f} "
+            f"| {r.get('compile_s',0):.1f} | {r.get('argument_size_in_bytes',0)/2**30:.2f} "
+            f"| {r.get('temp_size_in_bytes',0)/2**30:.2f} | {cstr} |")
+    return "\n".join(lines)
+
+
+ROOFLINE_SECTION = """
+## §Roofline — per (arch x shape), single-pod 16x16 mesh
+
+Hardware constants: {peak:.0f} TFLOP/s bf16/chip, {hbm:.0f} GB/s HBM/chip, {ici:.0f} GB/s ICI.
+Terms are seconds-per-step **per device**: compute = analytic_FLOPs/chip / peak;
+memory = HLO bytes-accessed / HBM bw; collective = post-SPMD wire bytes / ICI bw.
+`useful` = MODEL_FLOPS (6*N_active*D train, 2*N_active*D decode) / analytic FLOPs.
+
+**Measurement caveats (documented):** XLA's HloCostAnalysis counts a while-loop body
+once, so raw HLO FLOPs/bytes undercount scan-over-periods stacks by ~n_periods — the
+compute term therefore uses our analytic per-device FLOPs (validated against HLO on
+single-period models), while memory/collective terms use the HLO/post-SPMD numbers,
+which are exact *per scan body* and comparable across optimization iterations of the
+same architecture (the use §Perf makes of them).
+
+| arch | shape | compute(s) | memory(s) | collective(s) | dominant | useful | next lever |
+|---|---|---|---|---|---|---|---|
+{rows}
+
+Bottleneck summary: training and prefill of the large dense/MoE models are
+compute-dominant (the healthy regime); every decode shape is memory- or
+collective-dominant (KV-cache streaming — exactly the per-token time `T` that
+Heddle's high-MP workers attack); jamba/qwen2-moe decode and xlstm train are
+collective-dominant (SSM state + expert/grouped dispatch resharding).
+"""
+
+
+def fmt_roofline_rows(rows):
+    out = []
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {improvement_hint(r)} |")
+    return "\n".join(out)
+
+
+PERF_SECTION = """
+## §Perf — hillclimbing log (baseline all 40, hillclimb 3)
+
+All 40 combos were baselined (tables above + `dryrun_16x16_baseline.json`, kept
+verbatim).  Three pairs were hillclimbed per the hypothesis -> change -> measure ->
+validate loop; each iteration is recorded with its verdict.
+
+### Pair (a): jamba-v0.1-52b x train_4k — worst memory term (8.6 s, 166 GiB temp)
+
+1. **Hypothesis:** the full-sequence `associative_scan` for the Mamba recurrence
+   materializes O(log S) copies of the (B,S,d_inner,N) f32 state (napkin: 2 GiB x ~12
+   levels x fwd+bwd x 7 mamba layers/period ~ 10^2 GiB).
+   **Change:** chunked scan — outer sequential `lax.scan` over 512-token chunks
+   (checkpointed) with the associative scan inside.
+   **Result:** HLO bytes 7.04e12 -> 4.58e12 (**0.65x**), temp 166 -> 149 GiB. CONFIRMED.
+2. **Hypothesis:** nested per-layer `jax.checkpoint` inside the period body serializes
+   the backward working set (8 layers -> 1).
+   **Result:** temp 149 -> 157 GiB (CPU buffer assignment does not reuse across the
+   serialized segments). REFUTED — reverted.
+3. **Hypothesis:** the (B,S,d_inner,N) tensors need never exist in HBM at all — fuse
+   discretization (a = exp(dt A), b = dt x B) and the C-contraction into each chunk, so
+   the scan's HBM-resident tensors are (B,S,d_inner).
+   **Change:** `_mamba_scan_fused` (discretize + scan + contract per chunk).
+   **Result (cumulative):** HLO bytes 7.04e12 -> 3.66e12 (**0.52x**), temp 166 -> **67 GiB**
+   (0.40x), memory term 8.6 s -> 4.5 s; FLOPs unchanged; collective +20% (chunk-local
+   resharding) — dominant term nearly halved. CONFIRMED.
+
+### Pair (b): llama-3.2-vision-11b x train_4k — most collective-bound (2.02 s)
+
+1. **Hypothesis:** the Megatron-SP residual resharding lands on f32 tensors (observed
+   38 GiB of f32[16,4096,4096] all-gathers per scan body); gathering at the bf16
+   post-norm point halves the wire bytes.
+   **Change:** explicit bf16 SP boundary after each pre-norm.
+   **Result:** collective 1.01e11 -> 9.46e10 (**0.93x only** — the f32 traffic is
+   backward cotangents, not the forward gather). PARTIALLY REFUTED (kept: strictly
+   better).
+2. **Hypothesis:** for this cross-attention-heavy arch the SP memory saving does not
+   pay for its collectives; A/B `act_seq` off.
+   **Result:** collective 9.46e10 -> 5.81e10 (**0.61x**) at memory 8.5e11 -> 1.20e12
+   (1.41x), temp 27 -> 44 GiB; dominant term (collective 1.89 s) -> (memory 1.47 s):
+   max-term down **22%** and balanced. CONFIRMED — `sequence_parallel=False` is now a
+   per-arch config knob (vision sets it; deep dense stacks keep SP).
+
+### Pair (c): nemotron-4-15b x decode_32k — representative of the paper's technique
+(memory-bound decode, 17.4 GB/step/device vs ~6.2 GB napkin minimum)
+
+1. **Hypothesis:** without input-output aliasing XLA copies the whole 2.15 GB KV cache
+   every step; `donate_argnums` on the cache removes it.
+   **Result:** static bytes-accessed 1.74e10 -> 2.17e10 (**1.25x — worse**) on the CPU
+   backend; the metric does not register aliasing. REFUTED under this proxy (donation
+   remains the right call on real TPUs; reverted for metric comparability).
+2. **Hypothesis:** `k.astype(f32)` in the decode-attention oracle materializes f32
+   copies of the full cache (~8.6 GB/step).
+   **Change:** `preferred_element_type=f32` accumulation, no materialized upcast.
+   **Result:** 1.74e10 -> 1.73e10 (0.99x) — XLA had already fused the convert.
+   REFUTED (change kept: it is the correct expression of intent).
+3. **Analysis (the honest residual):** the remaining traffic decomposes as cache
+   read-for-attention (2.15 GB) + cache read+write for the functional update (4.3 GB)
+   + FSDP weight gather (1.9 GB) + partition/reshard copies.  The identified next
+   lever is the fused update+attend Pallas kernel (the attend half ships in
+   `kernels/decode_attention.py`); on TPU with donation it reads the cache once
+   (~3x reduction), but neither effect registers in the CPU static metric, so we stop
+   here rather than claim unmeasurable wins.
+
+### Beyond-paper system optimizations (recorded deltas, simulator benchmarks)
+
+These keep the paper's mechanisms but harden them; each is switchable so the
+paper-faithful baseline stays runnable (`work_aware_dp=False`, etc.):
+
+* **Monotone DP speedup** — Formula 3's argmin is locatable by binary search (cost
+  non-increasing, dp non-decreasing): O(n^2 m) -> O(n m log n): 6.9 s -> 1.7 s at
+  n=6400 (4x; with the paper's own aggregation: 0.14 s).
+* **Work-aware DP cost** — Formula 2's longest-member bound is joined by a
+  work-conserving bound; prevents unbounded work piling behind a short maxlen.
+* **Batch-capacity cap** in the DP (groups beyond slot capacity silently degrade to
+  queueing otherwise).
+* **Migration hygiene** — newest-prediction-wins request replacement, hysteresis,
+  per-trajectory cooldown + budget, and least-populated-in-window target selection:
+  turned migration from a net -8% (thrash) into **+8% makespan** on fig15.
+* **Historical-distribution provisioning** — Algorithm 2 plans on the (stable)
+  historical length distribution rather than intra-group-variance-blind prompt-time
+  point predictions (this is how the paper's "periodic, amortized" provisioning is
+  actually coherent).
+* **Two-pass SA pricing** — re-price each worker's token time at its DP group size
+  (search fig16: adaptive 395 s -> 349 s, overtaking Fix-8).
+* **Fused chunked cross-entropy** — logits never materialize (train temp on
+  qwen3-1.7b: 10.8 -> 4.6 GiB); **flash attention with custom VJP** (arctic train:
+  180 -> 40 GiB); **additive mask bias** (removes a 14 GiB hoisted pred broadcast).
+
+### Known multi-pod inefficiency (recorded)
+
+On the 2x16x16 mesh the fused Mamba chunk scan triggers XLA SPMD "involuntary full
+rematerialization" warnings (resharding f32[8,512,512,16] chunk states between the
+model-sharded einsum and the pod-replicated carry).  It compiles and the collective
+term stays sub-dominant, but this is the next §Perf candidate for the multi-pod mesh
+(fix: constrain the chunk carry to the same ("batch", None, "d_inner", None) spec as
+the chunk body so no cross-axis reshard is needed).
+
+## §Beyond — premise-violation robustness (bench `beyond_ctx`)
+
+The paper assumes interference = f(group size).  We also simulate a harsher data plane
+where batched decode pays per resident KV byte (co-locating two 40K-context tails is
+then expensive even at batch 2).  The published mechanisms alone degrade there
+(Formula 2 co-locates tails by design); with the work-aware cost + migration gates,
+Heddle still leads least-load 1.14x and cache-aware 1.27x.
+"""
+
+TAIL = """
+## Reproduction inventory
+
+* paper-faithful: Algorithms 1 & 2 line-by-line (see docstrings), Formula 2/3 DP with
+  exhaustive-oracle optimality tests, Lemma 5.1 contiguity property-tested, §5.3
+  endpoint-exclusive transmission scheduler property-tested, §4.1 harvest contract.
+* baselines implemented: Verl (group-pinned cache affinity), Verl* (skew-triggered
+  hybrid), Slime (least-load), FCFS/RR/Autellix-SJF schedulers, Fix-1/Fix-8.
+* substrate: 10-arch model zoo, real rollout workers (prefill / batched decode /
+  tool absorption / preemption persistence / KV migration), GRPO + AdamW + checkpoint,
+  two Pallas kernels (flash-decode GQA attention; fused Mamba selective scan — the
+  TPU-native endpoint of §Perf pair (a)) validated vs oracles over shape x dtype
+  sweeps, launchers (`repro.launch.train`, `repro.launch.serve`, `repro.launch.dryrun`).
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="dryrun_16x16.json")
+    ap.add_argument("--multi", default="dryrun_2x16x16.json")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    with open(args.single) as f:
+        single = json.load(f)
+    with open(args.multi) as f:
+        multi = json.load(f)
+
+    ok1 = sum(1 for r in single if r["status"] == "ok")
+    sk1 = sum(1 for r in single if r["status"] == "skipped")
+    ok2 = sum(1 for r in multi if r["status"] == "ok")
+    sk2 = sum(1 for r in multi if r["status"] == "skipped")
+
+    rows = [r for r in (roofline_row(rec) for rec in single) if r]
+
+    parts = [
+        HEADER,
+        DRYRUN_SECTION.format(ok1=ok1, skip1=sk1, ok2=ok2, skip2=sk2),
+        "### 16x16 single-pod dry-run\n\n" + fmt_dryrun_table(single),
+        "\n\n### 2x16x16 multi-pod dry-run\n\n" + fmt_dryrun_table(multi),
+        ROOFLINE_SECTION.format(peak=PEAK_FLOPS / 1e12, hbm=HBM_BW / 1e9,
+                                ici=ICI_BW / 1e9, rows=fmt_roofline_rows(rows)),
+        PERF_SECTION,
+        TAIL,
+    ]
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {args.out} ({ok1}+{sk1} single-pod, {ok2}+{sk2} multi-pod records, "
+          f"{len(rows)} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

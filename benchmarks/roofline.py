@@ -1,0 +1,244 @@
+"""Roofline analysis (deliverable g): three terms per (arch x input-shape x mesh).
+
+Sources:
+  * ``dryrun_16x16.json`` / ``dryrun_2x16x16.json`` — per-device HLO FLOPs / bytes from
+    ``compiled.cost_analysis()`` and per-collective wire bytes parsed from the compiled
+    (post-SPMD) HLO by ``repro.launch.dryrun``.
+  * analytic per-device FLOPs from the model configs (this module).
+
+Caveat (documented): XLA's HloCostAnalysis counts a while-loop body ONCE, so the HLO
+FLOPs/bytes of scan-over-periods models undercount by ~n_periods on the layer stack.
+We therefore compute the roofline terms from BOTH the raw HLO numbers (as specified)
+and the analytic FLOPs (authoritative for the compute term); the dominant-bottleneck
+call uses the analytic compute term and the HLO-parsed collective/memory terms.
+
+Hardware constants (v5e-class target): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_16x16.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+from repro.configs import get_config
+from repro.models.config import INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig
+
+PEAK_FLOPS = 197e12           # bf16 per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (aggregate per-chip estimate)
+
+
+# ------------------------------------------------------------------ analytic FLOPs
+
+def _attn_flops_token(cfg: ModelConfig, ctx: int) -> float:
+    """Per-token attention flops at context length ctx (QK^T + PV, full blocks)."""
+    H, hd, KV, d = cfg.n_heads, cfg.hd, cfg.n_kv_heads, cfg.d_model
+    proj = 2 * d * (H + 2 * KV) * hd + 2 * H * hd * d
+    qk_pv = 4 * H * hd * ctx
+    return proj + qk_pv
+
+
+def _mlp_flops_token(cfg: ModelConfig, d_ff: int) -> float:
+    mats = 3 if cfg.activation == "swiglu" else 2
+    return mats * 2 * cfg.d_model * d_ff
+
+
+def _moe_flops_token(cfg: ModelConfig) -> float:
+    d, E = cfg.d_model, cfg.n_experts
+    f = 2 * d * E                                      # router
+    mats = 3 if cfg.activation == "swiglu" else 2
+    f += cfg.top_k * cfg.capacity_factor * mats * 2 * d * cfg.moe_d_ff
+    if cfg.shared_d_ff:
+        f += 3 * 2 * d * cfg.shared_d_ff + 2 * d
+    if cfg.dense_residual_ff:
+        f += 3 * 2 * d * cfg.dense_residual_ff
+    return f
+
+
+def _mamba_flops_token(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state_dim
+    R = cfg.ssm_dt_rank or -(-d // 16)
+    return (2 * 2 * d * di                 # in + z proj
+            + 2 * cfg.ssm_conv_width * di
+            + 2 * di * (R + 2 * N) + 2 * R * di
+            + 10 * di * N                  # discretize + scan + reduce
+            + 2 * di * d)
+
+
+def _mlstm_flops_token(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    di = cfg.xlstm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    cs = 256                               # chunk size (intra-chunk quadratic term)
+    return (2 * 2 * d * di + 3 * 2 * di * di + 2 * 2 * di * H
+            + 2 * di * cs * 2              # intra-chunk qk/pv (amortized per token)
+            + 4 * H * hd * hd              # state update/read
+            + 2 * di * d)
+
+
+def _slstm_flops_token(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    return 2 * d * 4 * d + 8 * H * hd * hd + 2 * d * d
+
+
+def layer_flops_token(cfg: ModelConfig, kind: str, ctx: int) -> float:
+    mixer, _, mlp_kind = kind.partition("+")
+    f = 0.0
+    if mixer in ("attn", "dec", "enc_attn"):
+        actx = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+        f += _attn_flops_token(cfg, actx)
+        if mixer == "dec":
+            f += _attn_flops_token(cfg, cfg.encoder_seq)     # cross-attention
+    elif mixer == "xattn":
+        f += _attn_flops_token(cfg, cfg.image_seq)
+    elif mixer == "mamba":
+        f += _mamba_flops_token(cfg)
+    elif mixer == "mlstm":
+        f += _mlstm_flops_token(cfg)
+    elif mixer == "slstm":
+        f += _slstm_flops_token(cfg)
+    if mlp_kind == "mlp":
+        f += _mlp_flops_token(cfg, cfg.d_ff)
+    elif mlp_kind in ("moe", "moe_dr"):
+        f += _moe_flops_token(cfg)
+    return f
+
+
+def analytic_flops(cfg: ModelConfig, shape_name: str) -> dict:
+    """Global FLOPs for one step of (cfg, shape); returns fwd / total / model_flops."""
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        tokens = B                           # one new token per sequence
+        ctx = S
+    else:
+        tokens = B * S
+        ctx = S // 2                         # mean causal context
+    per_tok = sum(layer_flops_token(cfg, k, ctx) for k in cfg.layer_kinds())
+    per_tok += 2 * cfg.d_model * cfg.vocab   # lm head
+    fwd = per_tok * tokens
+    if cfg.arch_type == "audio" and shape.mode != "decode":
+        # encoder runs once per sequence (at decode time its output is cached)
+        enc_tok = B * cfg.encoder_seq
+        fwd += enc_tok * cfg.encoder_layers * layer_flops_token(
+            cfg, "enc_attn+mlp", cfg.encoder_seq)
+    total = fwd * 3 if shape.mode == "train" else fwd
+
+    # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), D = tokens processed
+    n_active = active_params(cfg)
+    model_flops = (6 if shape.mode == "train" else 2) * n_active * tokens
+    return {"fwd": fwd, "total": total, "model_flops": model_flops,
+            "tokens": tokens}
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Per-token-active parameter count (MoE counts top_k experts only)."""
+    d = cfg.d_model
+    n = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    for kind in cfg.layer_kinds():
+        mixer, _, mlp_kind = kind.partition("+")
+        if mixer in ("attn", "dec", "enc_attn"):
+            n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd + cfg.n_heads * cfg.hd * d
+            if mixer == "dec":
+                n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd + cfg.n_heads * cfg.hd * d
+        elif mixer == "xattn":
+            n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd + cfg.n_heads * cfg.hd * d
+        elif mixer == "mamba":
+            di = cfg.ssm_expand * d
+            R = cfg.ssm_dt_rank or -(-d // 16)
+            n += 2 * d * di + di * (R + 2 * cfg.ssm_state_dim) + R * di + di * d
+        elif mixer == "mlstm":
+            di = cfg.xlstm_expand * d
+            n += 2 * d * di + 3 * di * di + 2 * di * (di // cfg.hd if cfg.hd else 1) + di * d
+        elif mixer == "slstm":
+            n += 4 * d * d + 4 * d * (d // cfg.n_heads) + d * d
+        if mlp_kind == "mlp":
+            n += (3 if cfg.activation == "swiglu" else 2) * d * cfg.d_ff
+        elif mlp_kind in ("moe", "moe_dr"):
+            n += d * cfg.n_experts
+            n += cfg.top_k * (3 if cfg.activation == "swiglu" else 2) * d * cfg.moe_d_ff
+            if cfg.shared_d_ff:
+                n += 3 * d * cfg.shared_d_ff
+            if cfg.dense_residual_ff:
+                n += 3 * d * cfg.dense_residual_ff
+    if cfg.arch_type == "audio":
+        per = d * 4 * cfg.hd * cfg.n_heads // cfg.hd + 0
+        n += cfg.encoder_layers * (4 * d * d + (2 if cfg.activation != "swiglu" else 3)
+                                   * d * cfg.d_ff)
+    return float(n)
+
+
+# ------------------------------------------------------------------ report
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.is_subquadratic():
+        cfg = cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    chips = rec.get("chips", 256)
+    ana = analytic_flops(cfg, shape)
+    per_dev_analytic = ana["total"] / chips
+    hlo_flops = rec.get("hlo_flops", 0.0)            # per-device (SPMD module)
+    hlo_bytes = rec.get("hlo_bytes", 0.0)
+    coll = rec.get("collective_total_bytes", 0.0)    # per-device wire bytes
+
+    t_compute = per_dev_analytic / PEAK_FLOPS
+    t_compute_hlo = hlo_flops / PEAK_FLOPS
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape, "mesh": rec.get("mesh", "?"), "chips": chips,
+        "t_compute_s": t_compute, "t_compute_hlo_s": t_compute_hlo,
+        "t_memory_s": t_memory, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": ana["model_flops"],
+        "analytic_flops": ana["total"],
+        "useful_ratio": ana["model_flops"] / max(ana["total"], 1.0),
+        "hlo_flops": hlo_flops, "hlo_bytes": hlo_bytes, "collective_bytes": coll,
+        "temp_gib": rec.get("temp_size_in_bytes", 0) / 2**30,
+        "args_gib": rec.get("argument_size_in_bytes", 0) / 2**30,
+    }
+
+
+def improvement_hint(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        return "raise MFU: larger per-chip tiles / fewer recompute passes"
+    if d == "memory":
+        return "cut HBM traffic: fuse elementwise chains, shrink dtype, shard KV wider"
+    return "cut ICI: reshard to reduce all-gathers, overlap collectives with compute"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_16x16.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        records = json.load(f)
+    rows = [r for r in (roofline_row(rec) for rec in records) if r]
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute(s)':>11s} {'memory(s)':>10s} "
+           f"{'coll(s)':>9s} {'dominant':>10s} {'useful':>7s} {'temp GiB':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:11.3e} "
+              f"{r['t_memory_s']:10.3e} {r['t_collective_s']:9.3e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} {r['temp_gib']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

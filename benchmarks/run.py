@@ -1,0 +1,46 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+``python -m benchmarks.run``          fast mode (CI-friendly subset)
+``python -m benchmarks.run --full``   every task x model scale
+``python -m benchmarks.run --only fig12``
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_beyond, bench_overall, bench_overhead, bench_placement,
+                        bench_predictor, bench_resources, bench_scheduler)
+
+SUITES = {
+    "fig12_overall": bench_overall,
+    "fig13_predictor": bench_predictor,
+    "fig14_scheduler": bench_scheduler,
+    "fig15_placement": bench_placement,
+    "fig16_resources": bench_resources,
+    "tab12_overhead": bench_overhead,
+    "beyond_ctx": bench_beyond,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ({mod.__doc__.strip().splitlines()[0]})", file=sys.stderr)
+        mod.run(fast=not args.full)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

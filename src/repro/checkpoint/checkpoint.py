@@ -1,0 +1,45 @@
+"""Pytree checkpointing (npz + structure manifest, no external deps)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree, step: int = 0, extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    np.savez(os.path.join(path, "leaves.npz"),
+             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    manifest = {"n_leaves": len(leaves), "treedef": str(treedef), "step": step,
+                "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # structure file for restore: we re-flatten the caller's template on load, so we
+    # only need leaf order + dtype/shape validation data
+    with open(os.path.join(path, "shapes.json"), "w") as f:
+        json.dump([[list(np.asarray(x).shape), str(np.asarray(x).dtype)]
+                   for x in leaves], f)
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (shape/dtype validated)."""
+    data = np.load(os.path.join(path, "leaves.npz"))
+    leaves, treedef = jax.tree.flatten(template)
+    if len(leaves) != len(data.files):
+        raise ValueError(f"checkpoint has {len(data.files)} leaves, template {len(leaves)}")
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"leaf {i}: checkpoint {arr.shape} != template {np.shape(leaf)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def load_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,70 @@
+"""Assigned-architecture registry: one module per architecture (+ paper's own models).
+
+Every config cites its source model card / paper.  ``get_config(name)`` returns the full
+production config; ``get_config(name).reduced()`` is the CPU smoke variant.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import (INPUT_SHAPES, LONG_CONTEXT_WINDOW, InputShape,
+                                 ModelConfig)
+
+ARCHITECTURES = (
+    "smollm_135m",
+    "nemotron_4_15b",
+    "phi3_medium_14b",
+    "jamba_v0_1_52b",
+    "qwen2_moe_a2_7b",
+    "xlstm_350m",
+    "whisper_medium",
+    "llama_3_2_vision_11b",
+    "qwen3_1_7b",
+    "arctic_480b",
+)
+
+# canonical ids as assigned (dashes) -> module names
+_ALIASES = {a.replace("_", "-"): a for a in ARCHITECTURES}
+_ALIASES.update({
+    "smollm-135m": "smollm_135m",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "xlstm-350m": "xlstm_350m",
+    "whisper-medium": "whisper_medium",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "arctic-480b": "arctic_480b",
+})
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHITECTURES}
+
+
+def combos(include_skipped: bool = False):
+    """All assigned (arch, shape) combinations with the documented skips applied.
+
+    Yields (arch_name, shape_name, config) — config already switched to the
+    sliding-window variant for full-attention archs on long_500k (DESIGN.md §5).
+    """
+    for arch in ARCHITECTURES:
+        cfg = get_config(arch)
+        for shape_name, shape in INPUT_SHAPES.items():
+            if shape_name == "long_500k":
+                if cfg.arch_type == "audio":
+                    if include_skipped:
+                        yield arch, shape_name, None     # documented skip
+                    continue
+                if not cfg.is_subquadratic():
+                    yield arch, shape_name, cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+                    continue
+            yield arch, shape_name, cfg

@@ -1,0 +1,20 @@
+"""Llama-3.2-11B-Vision [hf:meta-llama/Llama-3.2-11B-Vision] — cross-attn image layers.
+
+40L, d_model=4096, 32 heads (GQA kv=8), d_ff=14336, vocab=128256; every 5th layer is a
+gated image cross-attention layer (8 total).  The ViT vision encoder is STUBBED:
+input_specs provides precomputed (B, 1600, d_model) patch embeddings fed through a
+learned projector.  long_500k runs via the sliding-window self-attention variant.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", arch_type="vlm",
+    d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=128256,
+    block_pattern=("attn+mlp", "attn+mlp", "attn+mlp", "attn+mlp", "xattn+mlp"),
+    n_periods=8,
+    activation="swiglu",
+    image_seq=1600,
+    # collective-bound under SP (§Perf pair b): residuals stay replicated-S
+    sequence_parallel=False,
+)

@@ -1,0 +1,15 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M] — llama-arch small dense.
+
+30L, d_model=576, 9 heads (GQA kv=3, head_dim=64), d_ff=1536, vocab=49152, SwiGLU, tied
+embeddings.  9 heads / kv=3 do not divide a 16-way model axis -> attention replicates on
+"model" while MLP (1536) and vocab (49152) shard (DESIGN.md §5).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", arch_type="dense",
+    d_model=576, n_heads=9, n_kv_heads=3, head_dim=64,
+    d_ff=1536, vocab=49152,
+    block_pattern=("attn+mlp",), n_periods=30,
+    activation="swiglu", tie_embeddings=True,
+)

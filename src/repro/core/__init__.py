@@ -1,0 +1,28 @@
+"""Heddle core: the paper's control-plane contribution.
+
+  trajectory        — trajectory-centric metadata & lifecycle
+  predictor         — progressive trajectory prediction (§4.1)
+  scheduler         — progressive priority scheduling, Algorithm 1 (§4.2)
+  placement         — presorted dynamic programming, Lemma 5.1 + Formula 3 (§5.2)
+  migration         — scaled-capacity re-placement + transmission scheduler (§5.3)
+  resource_manager  — sort-initialized simulated annealing, Algorithm 2 (§6.2)
+  controller        — control plane + baseline routing policies (§3, §7)
+"""
+
+from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
+                                  TransmissionScheduler, kv_cache_bytes)
+from repro.core.placement import (InterferenceModel, PlacementResult,
+                                  aggregate_short, brute_force_partition,
+                                  evaluate_partition, place, presorted_dp)
+from repro.core.predictor import (HistoryPredictor, ModelPredictor,
+                                  ProgressivePredictor, harvest, long_tail_recall,
+                                  pearson)
+from repro.core.resource_manager import (AllocationResult, WorkerLatencyModel,
+                                         homogeneous_allocation, sort_initialized_sa)
+from repro.core.scheduler import (FCFSScheduler, PPSScheduler, RoundRobinScheduler,
+                                  SJFScheduler, make_scheduler)
+from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase, make_group
+from repro.core.controller import (CacheAffinityRouting, HeddleConfig,
+                                   HeddleController, HybridRouting, LeastLoadRouting)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,0 +1,275 @@
+"""Heddle control plane (paper §3) and baseline routing policies (§7 baselines).
+
+The control plane maintains the global view (cluster resources + trajectory states) and
+makes the three orchestration decisions:
+
+  when  — scheduler (core/scheduler.py), refreshed by the progressive predictor;
+  where — placement (core/placement.py DP) + runtime migration (core/migration.py);
+  how   — resource manager (core/resource_manager.py simulated annealing).
+
+Baseline policies reproduce the paper's comparison systems on identical substrate:
+  * ``CacheAffinityRouting`` — Verl: statically pin each trajectory to a worker
+    (max prefix-cache hits, no load rebalancing).
+  * ``LeastLoadRouting`` — Slime: route every step to the least-loaded worker.
+  * ``HybridRouting`` — Verl*: least-load when load skew (max/min) exceeds a threshold,
+    else cache-affine.
+  * ``HeddleRouting`` — presorted-DP partition + rank-scaled migration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
+                                  TransmissionScheduler)
+from repro.core.placement import InterferenceModel, place
+from repro.core.predictor import ProgressivePredictor
+from repro.core.resource_manager import (WorkerLatencyModel, homogeneous_allocation,
+                                         sort_initialized_sa)
+from repro.core.trajectory import Trajectory
+
+
+class RoutingPolicy(Protocol):
+    def initial_worker(self, traj: Trajectory, loads: np.ndarray) -> int: ...
+    def step_worker(self, traj: Trajectory, loads: np.ndarray) -> int: ...
+
+
+class CacheAffinityRouting:
+    """Verl-style: pin each GRPO group (all samples of one prompt) to one worker.
+
+    Group pinning maximizes prefix-cache hits (the 16 samples share the prompt), which
+    is exactly why it suffers the paper's load-imbalance pathology: a hard prompt's
+    entire group of correlated-long trajectories lands on a single worker."""
+
+    def initial_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        return traj.prompt_id % len(loads)
+
+    def step_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        return traj.worker_id
+
+
+class LeastLoadRouting:
+    """Slime-style: every step goes to the least-loaded worker (cache be damned)."""
+
+    def initial_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        return int(np.argmin(loads))
+
+    def step_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        return int(np.argmin(loads))
+
+
+class HybridRouting:
+    """Verl*-style: least-load if max/min skew > threshold else cache-affine."""
+
+    def __init__(self, skew_threshold: float = 32.0) -> None:
+        self.skew_threshold = skew_threshold
+
+    def initial_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        return traj.prompt_id % len(loads)
+
+    def step_worker(self, traj: Trajectory, loads: np.ndarray) -> int:
+        lo = max(float(loads.min()), 1.0)
+        if float(loads.max()) / lo > self.skew_threshold:
+            return int(np.argmin(loads))
+        return traj.worker_id
+
+
+@dataclass
+class HeddleConfig:
+    scheduler: str = "pps"
+    adaptive_resources: bool = True
+    migration: bool = True
+    agg_threshold_quantile: float = 0.5   # aggregate trajectories below this length quantile
+    agg_block: int = 8
+    mp_degrees: tuple[int, ...] = (1, 2, 4, 8)
+    sa_cooling: float = 0.95
+    sa_seed: int = 0
+    rank_hysteresis: float = 0.50         # migrate only on a material prediction change
+    migration_cooldown_steps: int = 2     # steps between migrations of one trajectory
+    max_migrations_per_traj: int = 2
+    max_group_count: float | None = None  # worker batch-slot capacity (DP group cap)
+    work_aware_dp: bool = True            # beyond-paper DP cost (EXPERIMENTS.md §Perf);
+                                          # False = paper-faithful Formula 2
+
+
+class HeddleController:
+    """Trajectory-centric control plane for one rollout batch."""
+
+    def __init__(
+        self,
+        predictor: ProgressivePredictor,
+        interference: InterferenceModel,
+        latency: WorkerLatencyModel,
+        gpu_budget: int,
+        config: HeddleConfig | None = None,
+        max_workers: int | None = None,
+    ) -> None:
+        self.predictor = predictor
+        self.interference = interference
+        self.latency = latency
+        self.gpu_budget = gpu_budget
+        self.config = config or HeddleConfig()
+        self.max_workers = max_workers
+        self.transmission = TransmissionScheduler()
+        self.capacity_router: Optional[ScaledCapacityRouter] = None
+        self.degrees: list[int] = []
+        self.groups: list[list[int]] = []
+        self._traj_index: dict[int, Trajectory] = {}
+
+    # ------------------------------------------------------------ provisioning (how)
+    def provision(self, trajectories: Sequence[Trajectory]) -> list[int]:
+        """Run Algorithm 2 (or homogeneous fallback) to pick worker MP degrees.
+
+        Lengths are pre-aggregated (§5.2 short-trajectory heuristic) so every SA
+        evaluation's DP runs on a few hundred items instead of thousands.
+        """
+        lengths = self._predicted_lengths(trajectories)
+        # Provisioning runs periodically and is amortized across training steps
+        # (paper §7.5), so it plans on the *historical length distribution* — which is
+        # stable across steps — rather than on this batch's prompt-time point
+        # predictions (which are intra-group-variance-blind, Fig. 5).  Resample the
+        # historical distribution to this batch's size.
+        hist = getattr(self.predictor, "hist_lengths", None)
+        if hist is not None and len(hist) > 8 and len(lengths):
+            q = np.linspace(0.0, 1.0, len(lengths))
+            lengths = np.quantile(hist, q)
+        if self.config.adaptive_resources:
+            from repro.core.placement import aggregate_short
+            n = len(lengths)
+            if n > 192:
+                # keep the long tail at full resolution, bundle the rest aggressively:
+                # the SA only needs coarse makespans to rank allocations
+                thresh = float(np.quantile(lengths, max(0.0, 1.0 - 64.0 / n)))
+                block = max(self.config.agg_block, -(-n // 128))
+                ilen, icnt, _ = aggregate_short(lengths, thresh, block)
+            else:
+                ilen, icnt = lengths, None
+            res = sort_initialized_sa(
+                ilen, self.gpu_budget, self.interference, self.latency,
+                degrees=self.config.mp_degrees, cooling=self.config.sa_cooling,
+                max_workers=self.max_workers, counts=icnt, seed=self.config.sa_seed,
+                work_aware=self.config.work_aware_dp,
+                max_group_count=self.config.max_group_count)
+            self.degrees = res.degrees
+        else:
+            self.degrees = homogeneous_allocation(self.gpu_budget, self.config.mp_degrees[0])
+        return self.degrees
+
+    # ------------------------------------------------------------ placement (where)
+    def initial_placement(self, trajectories: Sequence[Trajectory]) -> list[list[int]]:
+        """Presorted DP over prompt-stage predictions; returns per-worker traj lists."""
+        self._traj_index = {t.traj_id: t for t in trajectories}
+        lengths = self._predicted_lengths(trajectories)
+        m = len(self.degrees) if self.degrees else (self.max_workers or 1)
+        thresh = float(np.quantile(lengths, self.config.agg_threshold_quantile)) \
+            if len(lengths) else None
+        token_times = (self.latency.token_times(self.degrees)
+                       if self.degrees else 1.0)
+        # heterogeneous DP via per-worker token times, aggregation for speed
+        from repro.core.placement import aggregate_short, presorted_dp
+        cap = self.config.max_group_count
+        wa = self.config.work_aware_dp
+        if thresh is not None and len(lengths) > 4 * m:
+            ilen, icnt, members = aggregate_short(lengths, thresh, self.config.agg_block)
+            res = presorted_dp(ilen, m, self.interference, token_times, counts=icnt,
+                               max_group_count=cap, work_aware=wa)
+            groups = [[orig for item in g for orig in members[item]] for g in res.groups]
+        else:
+            res = presorted_dp(lengths, m, self.interference, token_times,
+                               max_group_count=cap, work_aware=wa)
+            groups = res.groups
+        self.groups = groups
+        self.capacity_router = ScaledCapacityRouter([len(g) for g in groups])
+        for w, group in enumerate(groups):
+            for idx in group:
+                trajectories[idx].worker_id = w
+        # incremental rank-tracking state (see on_step_complete)
+        self._slots = {t.traj_id: i for i, t in enumerate(trajectories)}
+        self._pred_totals = np.asarray([t.predicted_total for t in trajectories])
+        self._live = np.ones(len(trajectories), dtype=bool)
+        # per-worker live-trajectory counts (migration load feedback)
+        self._worker_count = np.array([len(g) for g in groups], dtype=np.int64)
+        for t in trajectories:
+            t._last_migration_pred = t.predicted_total    # hysteresis anchor
+        return groups
+
+    # ------------------------------------------------------------ runtime (telemetry)
+    def on_step_complete(self, traj: Trajectory, active: Sequence[Trajectory]) -> Optional[MigrationRequest]:
+        """Telemetry hook: refresh prediction, maybe emit a migration request (§5.3).
+
+        Rank computation is incremental: a dense array of predicted totals (indexed by a
+        per-batch slot id) is kept up to date one entry at a time, so each telemetry
+        event costs O(n) vector ops instead of an O(n log n) sort.
+        """
+        traj.predicted_remaining = self.predictor.predict(traj)
+        traj.priority = traj.predicted_total
+        if not (self.config.migration and self.capacity_router is not None):
+            return None
+        slot = self._slots.get(traj.traj_id)
+        if slot is None or traj.finished:
+            return None
+        self._pred_totals[slot] = traj.priority
+        self._live[slot] = not traj.finished
+        live_preds = self._pred_totals[self._live]
+        n_active = int(self._live.sum())
+        if n_active == 0:
+            return None
+        rank = int((live_preds > traj.priority).sum())
+        target = self.capacity_router.worker_for_rank(rank, n_active)
+        # load feedback (beyond-paper, EXPERIMENTS.md §Perf): the paper's open-loop
+        # scaled-capacity mapping over-concentrates late-discovered tails on the few
+        # original "long" workers; pick the least-populated worker within a
+        # +/-2-group window of the capacity target instead.
+        lo, hi = max(0, target - 2), min(len(self._worker_count), target + 3)
+        target = lo + int(np.argmin(self._worker_count[lo:hi]))
+        # material-benefit gate: a migration must buy a real interference reduction
+        # (KV transfer + re-warm are not free), so require a clear load gap
+        if self._worker_count[target] + 4 > self._worker_count[traj.worker_id]:
+            return None
+        if target != traj.worker_id:
+            # hysteresis: only migrate when the prediction moved materially since the
+            # last migration decision — rank jitter at group boundaries otherwise
+            # ping-pongs trajectories between adjacent workers
+            last = getattr(traj, "_last_migration_pred", None)
+            if last is not None and abs(traj.priority - last) < \
+                    self.config.rank_hysteresis * max(last, 1.0) \
+                    and abs(target - traj.worker_id) < 2:
+                return None
+            if traj.migrations >= self.config.max_migrations_per_traj:
+                return None
+            if traj.num_steps - getattr(traj, "_last_mig_step", -99) < \
+                    self.config.migration_cooldown_steps:
+                return None
+            traj._last_mig_step = traj.num_steps
+            traj._last_migration_pred = traj.priority
+            self._worker_count[traj.worker_id] -= 1
+            self._worker_count[target] += 1
+            req = MigrationRequest(traj.traj_id, traj.worker_id, target,
+                                   length=traj.predicted_total)
+            self.transmission.submit(req)
+            return req
+        return None
+
+    def on_finish(self, traj: Trajectory) -> None:
+        slot = self._slots.get(traj.traj_id)
+        if slot is not None:
+            self._live[slot] = False
+        if getattr(self, "_worker_count", None) is not None and traj.worker_id is not None \
+                and traj.worker_id < len(self._worker_count):
+            self._worker_count[traj.worker_id] -= 1
+
+    def _predicted_lengths(self, trajectories: Sequence[Trajectory]) -> np.ndarray:
+        for t in trajectories:
+            t.predicted_remaining = self.predictor.predict(t)
+            t.priority = t.predicted_total
+        return np.asarray([t.predicted_total for t in trajectories])
+
+
+ROUTING_POLICIES = {
+    "cache_aware": CacheAffinityRouting,
+    "least_load": LeastLoadRouting,
+    "hybrid": HybridRouting,
+}

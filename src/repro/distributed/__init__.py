@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (DEFAULT_RULES, axis_rules, current_mesh,
+                                        logical_pspec, param_pspecs, shard)
+
+__all__ = ["DEFAULT_RULES", "axis_rules", "current_mesh", "logical_pspec",
+           "param_pspecs", "shard"]

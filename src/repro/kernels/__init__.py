@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the rollout hot spots, with pure-jnp oracles in ref.py.
+
+decode_attention — flash-decode GQA attention over blocked KV (BlockSpec VMEM tiling,
+                   online-softmax scratch across the sequential kv-block grid axis).
+mamba_scan       — fused selective-scan: discretize + recur + contract in VMEM, state
+                   carried in scratch across the sequential chunk grid axis.
+"""

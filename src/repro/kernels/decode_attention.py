@@ -1,0 +1,102 @@
+"""Flash-decode GQA attention Pallas kernel (TPU target, validated interpret=True).
+
+The rollout hot spot Heddle's resource manager accelerates is decode-phase attention
+against a long KV cache.  This kernel implements the TPU-native adaptation: the KV cache
+streams HBM -> VMEM in ``block_c``-sized tiles (BlockSpec), the (G x hd) query tile stays
+resident in VMEM, and an online-softmax accumulator lives in VMEM scratch across the
+sequential kv-block grid axis.  GQA is handled by grouping the G query heads of one KV
+head into a single (G, hd) x (hd, block_c) MXU matmul — no KV replication.
+
+Grid: (B, KV, num_kv_blocks); the last axis is sequential on TPU, enabling accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+DEFAULT_BLOCK_C = 512
+
+
+def _decode_attn_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_c: int, num_blocks: int):
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(F32)                      # (G, hd)
+    k = k_ref[0, :, 0].astype(F32)                   # (block_c, hd)
+    v = v_ref[0, :, 0].astype(F32)                   # (block_c, hd)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale   # (G, block_c)
+    vlen = vlen_ref[b]
+    pos = blk * block_c + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < vlen, s, -1e30)
+
+    m_prev = m_ref[...]                               # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # (G, block_c)
+    corr = jnp.exp(m_prev - m_new)                    # (G, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(blk == num_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid_len: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, C, KV, hd); valid_len: scalar or (B,) int32."""
+    B, KV, G, hd = q.shape
+    C = k.shape[1]
+    block_c = min(block_c, C)
+    num_blocks = -(-C // block_c)
+    pad = num_blocks * block_c - C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vlen = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B,))
+
+    kernel = functools.partial(_decode_attn_kernel, block_c=block_c,
+                               num_blocks=num_blocks)
+    grid = (B, KV, num_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, c, vl: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_c, 1, hd), lambda b, h, c, vl: (b, c, h, 0)),
+                pl.BlockSpec((1, block_c, 1, hd), lambda b, h, c, vl: (b, c, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, c, vl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), F32),       # running max m
+                pltpu.VMEM((G, 1), F32),       # running denom l
+                pltpu.VMEM((G, hd), F32),      # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(vlen, q, k, v)
+    return out

@@ -1,0 +1,110 @@
+"""Mamba selective-scan Pallas kernel (TPU target, validated interpret=True).
+
+The §Perf pair-(a) hillclimb showed the SSM recurrence is memory-bound: the fused-JAX
+version still writes per-chunk state tensors to HBM.  This kernel is the TPU-native
+endpoint of that optimization line: discretization (a = exp(dt A), b = dt x B), the
+recurrence h_t = a_t h_{t-1} + b_t AND the output contraction y_t = <h_t, C_t> all
+happen in VMEM — HBM sees only the (B,S,di)/(B,S,N) projections in and (B,S,di) out.
+The hidden state lives in a VMEM scratch carried across the sequential chunk axis of
+the grid; the d_inner dimension is tiled to a VMEM/lane-friendly block.
+
+Grid: (B, di_blocks, n_chunks) — the last axis is sequential on TPU, so the scratch
+state carries across chunks exactly like the lax.scan carry in the pure-JAX version.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+DEFAULT_CHUNK = 256
+DEFAULT_DI_BLOCK = 512
+
+
+def _mamba_scan_kernel(dt_ref, b_in_ref, c_in_ref, x_ref, a_log_ref, y_ref, h_ref,
+                       *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = -jnp.exp(a_log_ref[...].astype(F32))             # (di_blk, N)
+
+    def step(t, _):
+        dt_t = dt_ref[0, t, :].astype(F32)               # (di_blk,)
+        a_t = jnp.exp(dt_t[:, None] * A)                 # (di_blk, N)
+        bx = dt_t * x_ref[0, t, :].astype(F32)           # (di_blk,)
+        b_t = bx[:, None] * b_in_ref[0, t, :].astype(F32)[None, :]
+        h = a_t * h_ref[...] + b_t
+        h_ref[...] = h
+        y = jnp.sum(h * c_in_ref[0, t, :].astype(F32)[None, :], axis=1)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "di_block", "interpret"))
+def mamba_scan_pallas(dt: jax.Array, b_in: jax.Array, c_in: jax.Array, x: jax.Array,
+                      a_log: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+                      di_block: int = DEFAULT_DI_BLOCK,
+                      interpret: bool = True) -> jax.Array:
+    """Fused selective scan.
+
+    dt, x: (B, S, di) — softplus'd step sizes and conv'd inputs;
+    b_in, c_in: (B, S, N) — input/output projections; a_log: (di, N).
+    Returns y (B, S, di) f32 with y_t = <h_t, C_t>, h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t.
+    """
+    B, S, di = dt.shape
+    N = b_in.shape[-1]
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:   # identity padding: dt=0 -> a=1, b=0
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    di_block = min(di_block, di)
+    nd = -(-di // di_block)
+    if di % di_block:
+        raise ValueError(f"d_inner {di} must divide into {di_block} blocks")
+
+    grid = (B, nd, nc)
+    out = pl.pallas_call(
+        functools.partial(_mamba_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda b, d, c: (b, c, d)),   # dt
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),          # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),          # C
+            pl.BlockSpec((1, chunk, di_block), lambda b, d, c: (b, c, d)),   # x
+            pl.BlockSpec((di_block, N), lambda b, d, c: (d, 0)),             # A_log
+        ],
+        out_specs=pl.BlockSpec((1, chunk, di_block), lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((B, nc * chunk, di), F32),
+        scratch_shapes=[pltpu.VMEM((di_block, N), F32)],                     # h state
+        interpret=interpret,
+    )(dt, b_in, c_in, x, a_log)
+    return out[:, :S]
+
+
+def mamba_scan_ref(dt, b_in, c_in, x, a_log):
+    """Naive sequential oracle."""
+    B, S, di = dt.shape
+    A = -jnp.exp(a_log.astype(F32))
+    h = jnp.zeros((B, di, a_log.shape[-1]), F32)
+    ys = []
+    for t in range(S):
+        a_t = jnp.exp(dt[:, t, :, None].astype(F32) * A[None])
+        b_t = (dt[:, t] * x[:, t]).astype(F32)[..., None] * b_in[:, t].astype(F32)[:, None, :]
+        h = a_t * h + b_t
+        ys.append(jnp.einsum("bdn,bn->bd", h, c_in[:, t].astype(F32)))
+    return jnp.stack(ys, axis=1)

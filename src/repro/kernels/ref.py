@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """GQA decode attention oracle.
+
+    q: (B, KV, G, hd) — one new token's queries, grouped onto KV heads.
+    k, v: (B, C, KV, hd) — KV cache (C slots; only the first ``valid_len`` count —
+      ring caches pass C once full, so slot order never matters for the softmax).
+    valid_len: scalar or (B,) int32.
+    Returns (B, KV, G, hd).
+    """
+    B, KV, G, hd = q.shape
+    C = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    # f32 ACCUMULATION without materializing f32 copies of the (multi-GiB) KV cache:
+    # preferred_element_type upcasts inside the MXU/dot instead of writing k.astype(F32)
+    # back to HBM (EXPERIMENTS.md §Perf pair c: the astype copies were ~8.6 GB/step of
+    # the 17.4 GB/step HBM traffic on nemotron decode_32k).
+    s = jnp.einsum("bkgd,bckd->bkgc", q, k,
+                   preferred_element_type=F32) * scale
+    vl = jnp.asarray(valid_len)
+    vl = jnp.broadcast_to(vl, (B,))
+    mask = jnp.arange(C)[None] < vl[:, None]                  # (B, C)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Production mesh construction (function, not module constant — importing this module
+must never touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip v5e pod, or 2x16x16 = 512-chip two-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by sharding tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

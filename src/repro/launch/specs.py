@@ -1,0 +1,138 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x input-shape) combination.
+
+This is the contract between the model zoo and the multi-pod dry-run: for each mode
+(train / prefill / decode) it returns the jittable step function, the argument specs
+(no device allocation — ShapeDtypeStruct only, weak-type-correct) and matching
+NamedShardings derived from the logical-axis rules.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (cache_shardings, logical_pspec,
+                                        param_shardings)
+from repro.models import model as M
+from repro.models.config import InputShape, ModelConfig
+from repro.rl.grpo import GRPOConfig, grpo_loss
+from repro.rl.optimizer import AdamW
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _named(mesh, *axes):
+    return NamedSharding(mesh, P(*axes))
+
+
+def _batch_sharding(mesh, shape, ndim):
+    """Sharding for a (B, ...) tensor: batch over ("pod","data") when divisible."""
+    dims = ["batch"] + [None] * (ndim - 1)
+    return NamedSharding(mesh, logical_pspec(shape, dims, mesh))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mode: str, mesh) -> tuple[dict, dict]:
+    """(specs, shardings) for the data batch of one step."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: dict[str, Any] = {}
+    if mode == "train":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["loss_mask"] = _sds((B, S), jnp.float32)
+        specs["advantages"] = _sds((B,), jnp.float32)
+        specs["old_logprobs"] = _sds((B, S), jnp.float32)
+    elif mode == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.arch_type == "audio":
+        specs["encoder_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.arch_type == "vlm":
+        specs["image_embeds"] = _sds((B, cfg.image_seq, cfg.d_model), dt)
+    shardings = {k: _batch_sharding(mesh, v.shape, v.ndim) for k, v in specs.items()}
+    return specs, shardings
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def make_optimizer(cfg: ModelConfig) -> AdamW:
+    # bf16 moments: production choice so arctic-class optimizer state fits the pod
+    return AdamW(lr=1e-4, moment_dtype="bfloat16" if cfg.dtype == "bfloat16"
+                 else "float32")
+
+
+def decode_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh):
+    """Returns (step_fn, args_specs (tuple), in_shardings (tuple)) for lowering.
+
+    train   -> GRPO train_step(params, opt_state, batch)
+    prefill -> forward_full(params, batch) with cache materialization
+    decode  -> decode_step(params, cache, tokens) with a seq_len KV/state cache
+    """
+    mode = shape.mode
+    pspecs = param_specs(cfg)
+    pshard = param_shardings(pspecs, mesh)
+
+    if mode == "train":
+        opt = make_optimizer(cfg)
+        ospecs = jax.eval_shape(opt.init, pspecs)
+        opt_shard = type(ospecs)(NamedSharding(mesh, P()),
+                                 param_shardings(ospecs.mu, mesh),
+                                 param_shardings(ospecs.nu, mesh))
+        bspecs, bshard = batch_specs(cfg, shape, mode, mesh)
+        gcfg = GRPOConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: grpo_loss(cfg, gcfg, p, batch), has_aux=True)(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return train_step, (pspecs, ospecs, bspecs), (pshard, opt_shard, bshard)
+
+    if mode == "prefill":
+        bspecs, bshard = batch_specs(cfg, shape, mode, mesh)
+        capacity = decode_capacity(cfg, shape)
+
+        def prefill_step(params, batch):
+            logits, aux, cache = M.forward_full(cfg, params, batch, capacity=capacity)
+            return logits[:, -1], cache
+
+        return prefill_step, (pspecs, bspecs), (pshard, bshard)
+
+    # ---- decode: serve_step over a seq_len-context cache ------------------------
+    B = shape.global_batch
+    capacity = decode_capacity(cfg, shape)
+    enc_spec = None
+    if cfg.arch_type == "audio":
+        enc_spec = _sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    elif cfg.arch_type == "vlm":
+        enc_spec = _sds((B, cfg.image_seq, cfg.d_model), cfg.dtype)
+
+    def _cache():
+        enc = (jnp.zeros(enc_spec.shape, enc_spec.dtype)
+               if enc_spec is not None else None)
+        return M.init_cache(cfg, None, B, capacity, enc_out=enc,
+                            start_pos=shape.seq_len - 1)
+
+    cspecs = jax.eval_shape(_cache)
+    cshard = cache_shardings(cspecs, mesh)
+    tok_spec = _sds((B, 1), jnp.int32)
+    tok_shard = _batch_sharding(mesh, (B, 1), 2)
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(cfg, params, cache, tokens)
+
+    return serve_step, (pspecs, cspecs, tok_spec), (pshard, cshard, tok_shard)

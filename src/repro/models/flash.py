@@ -1,0 +1,150 @@
+"""Flash attention with a memory-correct custom VJP (pure JAX, scan-blocked).
+
+Forward: nested scan (q blocks x kv blocks) with online softmax; saves only
+(q, k, v, out, lse) — O(S) residuals.  Backward: recomputes block scores from the
+residuals (the flash-attention backward), so training never materializes an S x T
+score tensor nor the per-block scan intermediates naive autodiff would save.
+
+Layout: q (B, KV, G, S, hd) — GQA query heads grouped onto their KV head;
+k, v (B, T, KV, hd); positions (S,) / (T,) int32 (negative = padding).
+Masking: causal (q_pos >= k_pos) and optional sliding window (q_pos - k_pos < window).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+NEG = -1e30
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _mask_bias(qp, kp, causal: bool, window: int):
+    """Additive (qb, kb) f32 mask: 0 where attendable, -1e30 elsewhere.
+
+    An additive bias fuses into the score computation; a boolean ``where`` operand gets
+    broadcast to the full (B, KV, G, qb, kb) score shape and hoisted across scan
+    iterations by XLA (observed: a 14 GiB pred buffer on arctic-480b train)."""
+    m = (qp[:, None] >= 0) & (kp[None, :] >= 0) & (kp[None, :] < _INT_MAX)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window:
+        m &= qp[:, None] - kp[None, :] < window
+    return jnp.where(m, 0.0, NEG).astype(F32)
+
+
+def _pad_to(x, n, axis, value=0):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - x.shape[axis])
+    return jnp.pad(x, pad, constant_values=value) if n != x.shape[axis] else x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def flash_attention(q, k, v, q_pos, kv_pos, scale, causal, window, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, scale, causal, window,
+                             q_block, kv_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, scale, causal, window, qb, kb):
+    B, KV, G, S, hd = q.shape
+    T = k.shape[1]
+    qb, kb = min(qb, S), min(kb, T)
+    nq, nk = -(-S // qb), -(-T // kb)
+    q = _pad_to(q, nq * qb, 3)
+    q_pos = _pad_to(q_pos, nq * qb, 0, -1)
+    k = _pad_to(k, nk * kb, 1)
+    v = _pad_to(v, nk * kb, 1)
+    kv_pos = _pad_to(kv_pos, nk * kb, 0, _INT_MAX)
+
+    qs = q.reshape(B, KV, G, nq, qb, hd).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)      # (nk,B,KV,kb,hd)
+    vs = v.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)
+    qps = q_pos.reshape(nq, qb)
+    kps = kv_pos.reshape(nk, kb)
+
+    def q_blk(_, args):
+        qi, qp = args
+
+        def kv_blk(carry, kv_args):
+            m, l, acc = carry
+            ki, vi, kp = kv_args
+            s = jnp.einsum("bkgqd,bktd->bkgqt", qi.astype(F32), ki.astype(F32)) * scale
+            s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            return (m_new, l * corr + p.sum(-1),
+                    acc * corr[..., None] + jnp.einsum("bkgqt,bktd->bkgqd", p,
+                                                       vi.astype(F32))), None
+
+        m0 = jnp.full((B, KV, G, qb), -jnp.inf, F32)
+        l0 = jnp.zeros((B, KV, G, qb), F32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), F32)
+        (m, l, acc), _ = lax.scan(kv_blk, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+        return None, (out, lse)
+
+    _, (outs, lses) = lax.scan(q_blk, None, (qs, qps))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, nq * qb, hd)[..., :S, :]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, nq * qb)[..., :S]
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, scale, causal, window, qb, kb):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, scale, causal, window, qb, kb)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(scale, causal, window, qb, kb, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, KV, G, S, hd = q.shape
+    T = k.shape[1]
+    qb, kb = min(qb, S), min(kb, T)
+    nq, nk = -(-S // qb), -(-T // kb)
+    delta = jnp.sum(dout.astype(F32) * out.astype(F32), axis=-1)        # (B,KV,G,S)
+
+    qs = _pad_to(q, nq * qb, 3).reshape(B, KV, G, nq, qb, hd).transpose(3, 0, 1, 2, 4, 5)
+    dos = _pad_to(dout, nq * qb, 3).reshape(B, KV, G, nq, qb, hd).transpose(3, 0, 1, 2, 4, 5)
+    lses = _pad_to(lse, nq * qb, 3).reshape(B, KV, G, nq, qb).transpose(3, 0, 1, 2, 4)
+    dels = _pad_to(delta, nq * qb, 3).reshape(B, KV, G, nq, qb).transpose(3, 0, 1, 2, 4)
+    qps = _pad_to(q_pos, nq * qb, 0, -1).reshape(nq, qb)
+    ks = _pad_to(k, nk * kb, 1).reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)
+    vs = _pad_to(v, nk * kb, 1).reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)
+    kps = _pad_to(kv_pos, nk * kb, 0, _INT_MAX).reshape(nk, kb)
+
+    def q_blk(carry, args):
+        dk_acc, dv_acc = carry                       # (nk,B,KV,kb,hd) f32
+        qi, doi, lsei, deli, qp = args
+
+        def kv_blk(dq_acc, kv_args):
+            ki, vi, kp = kv_args
+            s = jnp.einsum("bkgqd,bktd->bkgqt", qi.astype(F32), ki.astype(F32)) * scale
+            s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
+            p = jnp.exp(s - lsei[..., None])                            # (B,KV,G,qb,kb)
+            dp = jnp.einsum("bkgqd,bktd->bkgqt", doi.astype(F32), vi.astype(F32))
+            ds = p * (dp - deli[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqt,bktd->bkgqd", ds, ki.astype(F32))
+            dk_i = jnp.einsum("bkgqt,bkgqd->bktd", ds, qi.astype(F32))
+            dv_i = jnp.einsum("bkgqt,bkgqd->bktd", p, doi.astype(F32))
+            return dq_acc, (dk_i, dv_i)
+
+        dq0 = jnp.zeros((B, KV, G, qi.shape[3], hd), F32)
+        dqi, (dks, dvs) = lax.scan(kv_blk, dq0, (ks, vs, kps))
+        return (dk_acc + dks, dv_acc + dvs), dqi
+
+    z = jnp.zeros((nk, B, KV, kb, hd), F32)
+    (dk_s, dv_s), dqs = lax.scan(q_blk, (z, z), (qs, dos, lses, dels, qps))
+    dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, nq * qb, hd)[..., :S, :]
+    dk = dk_s.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :T]
+    dv = dv_s.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, KV, hd)[:, :T]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None, None)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

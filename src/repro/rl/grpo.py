@@ -1,0 +1,139 @@
+"""GRPO (Group Relative Policy Optimization) — the paper's training-phase algorithm.
+
+The rollout phase (Heddle's target) produces groups of trajectories per prompt; GRPO
+normalizes rewards within each group into advantages and optimizes the clipped
+policy-ratio objective.  ``train_step`` is also what the multi-pod dry-run lowers for
+``train_4k`` shapes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.rl.optimizer import AdamW, AdamWState
+
+F32 = jnp.float32
+
+
+def group_advantages(rewards: jax.Array, group_size: int) -> jax.Array:
+    """GRPO advantage: per-group reward z-score.  rewards: (B,) with B % group == 0."""
+    g = rewards.reshape(-1, group_size).astype(F32)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + 1e-6)).reshape(-1)
+
+
+def token_logprobs(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Log-prob of tokens[t+1] under logits[t] (next-token).  Shapes (B,S,V),(B,S).
+
+    Computed as target_logit - logsumexp(logits): XLA fuses the reduction, so no full
+    f32 log-softmax tensor is ever materialized (a multi-GiB saving at 150K vocabs)."""
+    lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)          # (B,S)
+    tgt = tokens[:, 1:]
+    tgt_logit = jnp.take_along_axis(logits[:, :-1], tgt[..., None], axis=-1)[..., 0]
+    lp = tgt_logit.astype(F32) - lse[:, :-1]
+    return jnp.pad(lp, ((0, 0), (0, 1)))            # (B,S), last position zero
+
+
+def chunked_token_logprobs(cfg: ModelConfig, params, hidden: jax.Array,
+                           tokens: jax.Array, chunk: int = 512) -> jax.Array:
+    """Fused linear + cross-entropy over sequence chunks: the (chunk, V) logits tile is
+    the only logits tensor that ever exists (forward AND backward via checkpointed scan
+    body) — at 150K vocabs this replaces multi-GiB f32 log-softmax buffers."""
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))           # predict t+1 from t
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    hc = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(_, args):
+        xc, tg = args
+        logits = xc @ head                                       # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+        tl = jnp.take_along_axis(logits, tg[..., None], axis=-1)[..., 0]
+        return None, tl.astype(F32) - lse
+
+    _, lp = jax.lax.scan(body, None, (hc, tc))                   # (nc, B, chunk)
+    lp = lp.transpose(1, 0, 2).reshape(B, nc * chunk)[:, :S]
+    return lp.at[:, -1].set(0.0)                                 # last position: no target
+
+
+def policy_logprobs(cfg: ModelConfig, params, batch, remat: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(per-token logprobs, moe aux loss) without materializing full logits."""
+    hidden, aux = M.forward_full(cfg, params, batch, remat=remat, return_hidden=True)
+    return chunked_token_logprobs(cfg, params, hidden, batch["tokens"]), aux
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0                 # optional KL to reference (0 = DAPO-style off)
+    aux_coef: float = 0.01               # MoE load-balance loss weight
+    group_size: int = 16                 # samples per prompt (paper: 16)
+
+
+def grpo_loss(cfg: ModelConfig, gcfg: GRPOConfig, params, batch) -> tuple[jax.Array, dict]:
+    """batch: tokens (B,S) int32, loss_mask (B,S) f32 (1 on response tokens),
+    advantages (B,) f32, old_logprobs (B,S) f32 (behavior policy), plus modality extras."""
+    logp, aux = policy_logprobs(cfg, params, batch, remat=True)
+    ratio = jnp.exp(logp - batch["old_logprobs"])
+    adv = batch["advantages"][:, None].astype(F32)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - gcfg.clip_eps, 1 + gcfg.clip_eps) * adv
+    mask = batch["loss_mask"].astype(F32)
+    per_tok = -jnp.minimum(unclipped, clipped) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pg_loss = per_tok.sum() / denom
+    kl = ((logp - batch["old_logprobs"]) * mask).sum() / denom
+    loss = pg_loss + gcfg.aux_coef * aux + gcfg.kl_coef * kl
+    return loss, {"pg_loss": pg_loss, "aux_loss": aux, "approx_kl": kl}
+
+
+def make_train_step(cfg: ModelConfig, gcfg: GRPOConfig | None = None,
+                    opt: AdamW | None = None):
+    """Jittable (params, opt_state, batch) -> (params', opt_state', metrics)."""
+    gcfg = gcfg or GRPOConfig()
+    opt = opt or AdamW()
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: grpo_loss(cfg, gcfg, p, batch), has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg: ModelConfig, opt: AdamW | None = None):
+    """Plain next-token LM step (used by ablations and the quickstart example)."""
+    opt = opt or AdamW()
+
+    def loss_fn(params, batch):
+        logp, aux = policy_logprobs(cfg, params, batch)
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(logp) if mask is None else mask.astype(F32)
+        loss = -(logp * mask).sum() / jnp.maximum(mask.sum(), 1.0) + 0.01 * aux
+        return loss
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step

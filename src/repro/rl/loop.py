@@ -1,0 +1,162 @@
+"""End-to-end agentic RL training loop: Heddle-orchestrated rollout + GRPO updates.
+
+One training step (paper §2.2):
+  1. rollout — groups of trajectories per prompt, executed on real RolloutWorkers with
+     tool calls in the loop, placed/scheduled by the Heddle controller;
+  2. inference — old-policy logprobs over the collected trajectories;
+  3. training — GRPO update on the policy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import InterferenceModel, place
+from repro.core.predictor import ProgressivePredictor
+from repro.engine.sampler import SamplerConfig
+from repro.engine.worker import RolloutWorker
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.rl import data as D
+from repro.rl.grpo import GRPOConfig, group_advantages, make_train_step, token_logprobs
+from repro.rl.optimizer import AdamW
+
+
+@dataclass
+class RolloutRecord:
+    tokens: list[int]
+    prompt_len: int
+    reward: float
+    steps: int
+
+
+@dataclass
+class TrainerConfig:
+    group_size: int = 4
+    n_workers: int = 2
+    max_steps_per_traj: int = 3          # agentic steps (gen -> tool -> gen ...)
+    gen_tokens_per_step: int = 8
+    max_seq: int = 64
+    capacity: int = 96
+    lr: float = 5e-4
+    seed: int = 0
+
+
+class HeddleTrainer:
+    """Small-scale but fully real: JAX model, tool loop, Heddle placement, GRPO."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig = TrainerConfig()):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = M.init_params(cfg, key)
+        self.opt = AdamW(lr=tcfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self.train_step = jax.jit(make_train_step(cfg, GRPOConfig(
+            group_size=tcfg.group_size), self.opt))
+        self.interference = InterferenceModel.analytic(0.02)
+        self.workers = [
+            RolloutWorker(cfg, self.params, capacity=tcfg.capacity, worker_id=i,
+                          sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+                          seed=tcfg.seed)
+            for i in range(tcfg.n_workers)
+        ]
+        self.step_count = 0
+
+    # ------------------------------------------------------------------ rollout
+    def rollout(self, tasks: list[D.MathTask]) -> list[RolloutRecord]:
+        tcfg = self.tcfg
+        for w in self.workers:
+            w.params = self.params                     # weight sync (colocated update)
+            w.store.clear()
+        # trajectory-aware placement: predicted length ~ prompt length heuristic at t=0
+        # (group_size samples per task, placed by the presorted DP)
+        n = len(tasks) * tcfg.group_size
+        lengths = [float(tcfg.max_steps_per_traj * tcfg.gen_tokens_per_step)] * n
+        placement = place(lengths, len(self.workers), self.interference)
+        assignment = np.zeros(n, int)
+        for wid, group in enumerate(placement.groups):
+            for idx in group:
+                assignment[idx] = wid
+
+        records: list[RolloutRecord] = []
+        sid = 0
+        live: list[tuple[int, D.MathTask, int, int]] = []   # (seq_id, task, worker, steps)
+        for task in tasks:
+            for g in range(tcfg.group_size):
+                wid = int(assignment[sid])
+                self.workers[wid].prefill(sid, task.prompt_tokens())
+                live.append((sid, task, wid, 0))
+                sid += 1
+
+        prompt_lens = {s: len(t.prompt_tokens()) for s, t, _, _ in
+                       [(x[0], x[1], x[2], x[3]) for x in live]}
+        done: dict[int, RolloutRecord] = {}
+        for agent_step in range(tcfg.max_steps_per_traj):
+            next_live = []
+            by_worker: dict[int, list[int]] = {}
+            for s, task, wid, steps in live:
+                by_worker.setdefault(wid, []).append(s)
+            gen_out: dict[int, list[int]] = {}
+            for wid, seqs in by_worker.items():
+                gen_out.update(self.workers[wid].decode(seqs, tcfg.gen_tokens_per_step,
+                                                        stop_token=D.EOS))
+            for s, task, wid, steps in live:
+                gen = gen_out.get(s, [])
+                seq = self.workers[wid].store[s]
+                finished = (D.EOS in gen) or (agent_step == tcfg.max_steps_per_traj - 1) \
+                    or len(seq.tokens) >= tcfg.max_seq - 8
+                if D.TOOL_CALL in gen and not finished:
+                    # tool interval: calculator returns the sum token (masked from loss
+                    # via teacher-forced extend; context grows, trajectory continues)
+                    self.workers[wid].extend(s, task.tool_result_tokens())
+                    next_live.append((s, task, wid, steps + 1))
+                elif finished:
+                    reward = task.reward(seq.tokens[prompt_lens[s]:])
+                    done[s] = RolloutRecord(list(seq.tokens), prompt_lens[s], reward,
+                                            steps + 1)
+                    self.workers[wid].release(s)
+                else:
+                    next_live.append((s, task, wid, steps + 1))
+            live = next_live
+            if not live:
+                break
+        for s, task, wid, steps in live:
+            seq = self.workers[wid].store[s]
+            done[s] = RolloutRecord(list(seq.tokens), prompt_lens[s],
+                                    task.reward(seq.tokens[prompt_lens[s]:]), steps)
+            self.workers[wid].release(s)
+        return [done[s] for s in sorted(done)]
+
+    # ------------------------------------------------------------------ update
+    def update(self, records: list[RolloutRecord]) -> dict:
+        tcfg = self.tcfg
+        tokens, mask = D.pad_batch([r.tokens for r in records],
+                                   [r.prompt_len for r in records], tcfg.max_seq)
+        rewards = jnp.asarray([r.reward for r in records], jnp.float32)
+        adv = group_advantages(rewards, tcfg.group_size)
+        batch = {"tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask),
+                 "advantages": adv}
+        # old-policy logprobs (inference phase)
+        logits, _ = M.forward_full(self.cfg, self.params, {"tokens": batch["tokens"]})
+        batch["old_logprobs"] = jax.lax.stop_gradient(
+            token_logprobs(logits, batch["tokens"]))
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, batch)
+        self.step_count += 1
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["mean_reward"] = float(rewards.mean())
+        return metrics
+
+    def train(self, n_iterations: int, tasks_per_iter: int = 4, seed: int = 0) -> list[dict]:
+        history = []
+        for it in range(n_iterations):
+            tasks = D.sample_tasks(tasks_per_iter, seed=seed + it)
+            records = self.rollout(tasks)
+            metrics = self.update(records)
+            history.append(metrics)
+        return history

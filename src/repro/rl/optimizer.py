@@ -1,0 +1,61 @@
+"""AdamW optimizer (pure-pytree, dependency-free)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # f32 by default; the production dry-runs use bf16 moments so arctic-class models
+    # fit a 256-chip pod (DESIGN.md §8) — moments are sharded exactly like params.
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(self, grads, state: AdamWState, params):
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mdt = jnp.dtype(self.moment_dtype)
+        mu = jax.tree.map(lambda m, g: (b1 * m.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)).astype(mdt),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: (b2 * v.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                                        ).astype(mdt),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu)

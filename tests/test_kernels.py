@@ -1,0 +1,150 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.ref import decode_attention_ref
+from repro.models.flash import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+DECODE_SHAPES = [
+    # (B, KV, G, hd, C)
+    (1, 1, 1, 64, 64),
+    (2, 2, 4, 64, 128),
+    (1, 8, 6, 128, 1024),
+    (4, 1, 1, 64, 300),       # ragged: C not a multiple of block
+    (2, 3, 2, 128, 512),
+    (1, 16, 1, 64, 700),
+    (3, 4, 7, 128, 257),
+]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_decode_attention_kernel_matches_oracle(shape, dtype):
+    B, KV, G, hd, C = shape
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, C, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, C, KV, hd), dtype)
+    vl = jnp.asarray(np.random.default_rng(0).integers(1, C + 1, B), jnp.int32)
+    out_p = decode_attention_pallas(q, k, v, vl, block_c=128, interpret=True)
+    out_r = decode_attention_ref(q, k, v, vl)
+    tol = 1e-5 if dtype == "float32" else 2.5e-2
+    err = float(jnp.abs(out_p.astype(jnp.float32) - out_r.astype(jnp.float32)).max())
+    assert err < tol, (shape, dtype, err)
+
+
+def test_decode_attention_block_size_invariance():
+    B, KV, G, hd, C = 2, 2, 2, 64, 512
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, C, KV, hd))
+    v = jax.random.normal(ks[2], (B, C, KV, hd))
+    vl = jnp.asarray([512, 300], jnp.int32)
+    outs = [decode_attention_pallas(q, k, v, vl, block_c=bc, interpret=True)
+            for bc in (64, 128, 512)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+
+def test_decode_attention_respects_valid_len():
+    """Slots beyond valid_len must not influence the output."""
+    B, KV, G, hd, C = 1, 1, 2, 64, 256
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, C, KV, hd))
+    v = jax.random.normal(ks[2], (B, C, KV, hd))
+    vl = jnp.asarray([100], jnp.int32)
+    out1 = decode_attention_pallas(q, k, v, vl, interpret=True)
+    k2 = k.at[:, 100:].set(99.0)            # poison the invalid region
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = decode_attention_pallas(q, k2, v2, vl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ----------------------------------------------------------------- flash attention
+
+def _flash_ref(q, k, v, qp, kp, scale, causal, window):
+    s = jnp.einsum("bkgsd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    m = (qp[:, None] >= 0) & (kp[None, :] >= 0)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window:
+        m &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkd->bkgsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("S,T,window", [(64, 64, 0), (100, 100, 0), (100, 100, 17),
+                                        (33, 70, 0), (128, 128, 32)])
+def test_flash_attention_forward_and_grads(S, T, window):
+    B, KV, G, hd = 2, 2, 3, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, S, hd))
+    k = jax.random.normal(ks[1], (B, T, KV, hd))
+    v = jax.random.normal(ks[2], (B, T, KV, hd))
+    qp, kp = jnp.arange(S), jnp.arange(T)
+    scale = 1 / math.sqrt(hd)
+    out = flash_attention(q, k, v, qp, kp, scale, True, window, 32, 48)
+    ref = _flash_ref(q, k, v, qp, kp, scale, True, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    gf = jax.grad(lambda *a: flash_attention(*a, qp, kp, scale, True, window, 32, 48)
+                  .sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: _flash_ref(*a, qp, kp, scale, True, window).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+# ----------------------------------------------------------------- mamba scan kernel
+
+from repro.kernels.mamba_scan import mamba_scan_pallas, mamba_scan_ref
+
+MAMBA_SHAPES = [
+    # (B, S, di, N, chunk, di_block)
+    (2, 37, 64, 8, 16, 32),
+    (1, 128, 128, 16, 64, 128),
+    (3, 50, 96, 4, 25, 48),
+    (2, 33, 64, 16, 64, 64),     # chunk > S, ragged
+]
+
+
+@pytest.mark.parametrize("shape", MAMBA_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_mamba_scan_kernel_matches_oracle(shape, dtype):
+    B, S, di, N, chunk, dib = shape
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di))).astype(dtype)
+    b_in = (jax.random.normal(ks[1], (B, S, N)) * 0.5).astype(dtype)
+    c_in = (jax.random.normal(ks[2], (B, S, N)) * 0.5).astype(dtype)
+    x = (jax.random.normal(ks[3], (B, S, di)) * 0.5).astype(dtype)
+    a_log = jax.random.normal(ks[4], (di, N)) * 0.3
+    out = mamba_scan_pallas(dt, b_in, c_in, x, a_log, chunk=chunk, di_block=dib,
+                            interpret=True)
+    ref = mamba_scan_ref(dt, b_in, c_in, x, a_log)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    assert float(jnp.abs(out - ref).max()) < tol
+
+
+def test_mamba_scan_kernel_chunk_invariance():
+    B, S, di, N = 2, 64, 64, 8
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    b_in = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    c_in = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    x = jax.random.normal(ks[3], (B, S, di)) * 0.5
+    a_log = jax.random.normal(ks[4], (di, N)) * 0.3
+    outs = [mamba_scan_pallas(dt, b_in, c_in, x, a_log, chunk=c, di_block=64,
+                              interpret=True) for c in (8, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)

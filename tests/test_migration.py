@@ -1,0 +1,74 @@
+"""Trajectory migration (§5.3): transmission scheduler + scaled-capacity router."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
+                                  TransmissionScheduler, kv_cache_bytes,
+                                  migration_time)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9), st.floats(1, 1e5)),
+                min_size=1, max_size=40))
+def test_batches_are_endpoint_exclusive(reqs):
+    """No two selected (or running) migrations may share a src or dst worker."""
+    ts = TransmissionScheduler()
+    for i, (src, dst, length) in enumerate(reqs):
+        ts.submit(MigrationRequest(i, src, dst, length))
+    seen_total = 0
+    for _ in range(100):
+        batch = ts.next_batch()
+        if not batch:
+            break
+        endpoints = [w for r in batch for w in (r.src, r.dst)]
+        assert len(endpoints) == len(set(endpoints)), "endpoint conflict in batch"
+        seen_total += len(batch)
+        for r in batch:
+            ts.complete(r.traj_id)
+    valid = sum(1 for s, d, _ in reqs if s != d)
+    assert seen_total == valid                       # everything eventually scheduled
+
+
+def test_longest_first_within_batch():
+    ts = TransmissionScheduler()
+    ts.submit(MigrationRequest(1, 0, 1, length=10))
+    ts.submit(MigrationRequest(2, 0, 2, length=100))   # conflicts with req 1 on src 0
+    batch = ts.next_batch()
+    assert [r.traj_id for r in batch] == [2]           # longer one wins the endpoint
+
+
+def test_running_migrations_block_endpoints():
+    ts = TransmissionScheduler()
+    ts.submit(MigrationRequest(1, 0, 1, length=10))
+    assert [r.traj_id for r in ts.next_batch()] == [1]
+    ts.submit(MigrationRequest(2, 1, 2, length=99))    # dst 1 still busy
+    assert ts.next_batch() == []
+    ts.complete(1)
+    assert [r.traj_id for r in ts.next_batch()] == [2]
+
+
+def test_submit_replaces_stale_request_for_same_trajectory():
+    ts = TransmissionScheduler()
+    ts.submit(MigrationRequest(7, 0, 1, length=10))
+    ts.submit(MigrationRequest(7, 0, 3, length=12))    # newer prediction, new target
+    batch = ts.next_batch()
+    assert len(batch) == 1 and batch[0].dst == 3
+
+
+def test_scaled_capacity_router_rank_mapping():
+    r = ScaledCapacityRouter([2, 3, 5])                # 10 trajectories originally
+    # full population: ranks fall into original group extents
+    assert r.worker_for_rank(0, 10) == 0
+    assert r.worker_for_rank(1, 10) == 0
+    assert r.worker_for_rank(2, 10) == 1
+    assert r.worker_for_rank(9, 10) == 2
+    # half the trajectories remain: capacities scale to 1, 1.5, 2.5
+    assert r.worker_for_rank(0, 5) == 0
+    assert r.worker_for_rank(4, 5) == 2
+
+
+def test_kv_bytes_and_migration_time_scale():
+    small = kv_cache_bytes(1_000, 40, 8, 128)
+    big = kv_cache_bytes(10_000, 40, 8, 128)
+    assert big == 10 * small
+    assert migration_time(big, 50e9) > migration_time(small, 50e9)

@@ -1,0 +1,110 @@
+"""Presorted DP (paper §5.2): optimality, Lemma 5.1, aggregation, extensions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (InterferenceModel, aggregate_short,
+                                  brute_force_partition, evaluate_partition, place,
+                                  presorted_dp)
+
+F = InterferenceModel.analytic(0.2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=2, max_size=7),
+       st.integers(2, 3), st.floats(0.01, 0.5))
+def test_dp_matches_brute_force(lengths, m, slope):
+    """Formula 3 + Lemma 5.1 give the globally optimal partition (exhaustive oracle)."""
+    interference = InterferenceModel.analytic(slope)
+    res = presorted_dp(lengths, m, interference)
+    _, best = brute_force_partition(lengths, m, interference)
+    assert res.makespan <= best + 1e-9
+    # the reported makespan is self-consistent with the objective
+    assert abs(evaluate_partition(res.groups, lengths, interference)
+               - res.makespan) < 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(1, 1e4), min_size=3, max_size=40), st.integers(1, 8))
+def test_dp_groups_are_contiguous_in_sorted_order(lengths, m):
+    """Lemma 5.1: each group is a contiguous slice of the descending-sorted list."""
+    res = presorted_dp(lengths, m, F)
+    slen = np.asarray(lengths)
+    boundaries = []
+    for g in res.groups:
+        if not g:
+            continue
+        vals = sorted((slen[i] for i in g), reverse=True)
+        boundaries.append((max(vals), min(vals)))
+    # consecutive groups: previous group's min >= next group's max (desc order)
+    for (hi1, lo1), (hi2, lo2) in zip(boundaries, boundaries[1:]):
+        assert lo1 >= hi2 - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(1, 1e4), min_size=2, max_size=40), st.integers(1, 6))
+def test_dp_partitions_everything_once(lengths, m):
+    res = presorted_dp(lengths, m, F)
+    seen = sorted(i for g in res.groups for i in g)
+    assert seen == list(range(len(lengths)))
+
+
+def test_monotone_speedup_equals_naive():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        lengths = rng.pareto(1.5, 60) * 100 + 1
+        a = presorted_dp(lengths, 7, F, monotone_speedup=True)
+        b = presorted_dp(lengths, 7, F, monotone_speedup=False)
+        assert abs(a.makespan - b.makespan) < 1e-9
+
+
+def test_heterogeneous_worker_token_times():
+    """Fast workers (low T) take the long groups (§6 sort-initialized mapping)."""
+    lengths = [100, 90, 10, 9, 8, 7]
+    res = presorted_dp(lengths, 3, F, base_token_time=[0.25, 0.5, 1.0])
+    # the longest trajectory must sit on the fastest worker
+    assert 0 in res.groups[0]
+    assert res.makespan <= presorted_dp(lengths, 3, F,
+                                        base_token_time=[1.0, 1.0, 1.0]).makespan
+
+
+def test_aggregation_reduces_items_preserves_membership():
+    rng = np.random.default_rng(1)
+    lengths = rng.pareto(1.2, 500) * 100 + 1
+    ilen, icnt, members = aggregate_short(lengths, float(np.quantile(lengths, 0.8)), 8)
+    assert len(ilen) < len(lengths)
+    flat = sorted(i for ms in members for i in ms)
+    assert flat == list(range(len(lengths)))
+    assert int(icnt.sum()) == len(lengths)
+
+
+def test_place_pipeline_with_aggregation():
+    rng = np.random.default_rng(2)
+    lengths = rng.pareto(1.2, 300) * 100 + 1
+    res = place(lengths, 8, F, agg_threshold=float(np.quantile(lengths, 0.7)))
+    flat = sorted(i for g in res.groups for i in g)
+    assert flat == list(range(len(lengths)))
+
+
+def test_max_group_count_cap_is_respected():
+    lengths = [10.0] * 50
+    res = presorted_dp(lengths, 5, F, max_group_count=12)
+    assert all(len(g) <= 12 for g in res.groups)
+
+
+def test_work_aware_cost_upper_bounds_formula2():
+    rng = np.random.default_rng(3)
+    lengths = rng.pareto(1.2, 80) * 500 + 10
+    plain = presorted_dp(lengths, 6, F)
+    wa = presorted_dp(lengths, 6, F, work_aware=True)
+    # the work-aware objective adds a lower bound, so its optimum cannot be cheaper
+    assert wa.makespan >= plain.makespan - 1e-9
+
+
+def test_interference_model_monotone_and_normalized():
+    assert F(1) == pytest.approx(1.0)
+    xs = [F(b) for b in (1, 2, 8, 64, 256)]
+    assert xs == sorted(xs)
+    with pytest.raises(ValueError):
+        InterferenceModel([1, 2, 3], [3.0, 2.0, 1.0])

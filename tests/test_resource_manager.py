@@ -1,0 +1,69 @@
+"""Sort-initialized simulated annealing (Algorithm 2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import InterferenceModel, presorted_dp
+from repro.core.resource_manager import (WorkerLatencyModel, _perturb,
+                                         _random_allocation, homogeneous_allocation,
+                                         sort_initialized_sa)
+
+F = InterferenceModel.analytic(0.05)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 64), st.integers(0, 10_000))
+def test_random_allocation_conserves_budget(budget, seed):
+    rng = np.random.default_rng(seed)
+    alloc = _random_allocation(rng, budget, (1, 2, 4, 8))
+    assert sum(alloc) == budget
+    assert all(d in (1, 2, 4, 8) for d in alloc)
+    assert alloc == sorted(alloc, reverse=True)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(8, 64), st.integers(0, 10_000))
+def test_perturbation_preserves_budget_and_degrees(budget, seed):
+    rng = np.random.default_rng(seed)
+    alloc = _random_allocation(rng, budget, (1, 2, 4, 8))
+    for _ in range(20):
+        alloc = _perturb(rng, alloc, (1, 2, 4, 8))
+        assert sum(alloc) == budget
+        assert all(d in (1, 2, 4, 8) for d in alloc)
+        assert alloc == sorted(alloc, reverse=True)
+
+
+def test_sa_budget_and_quality():
+    rng = np.random.default_rng(0)
+    lengths = np.concatenate([rng.pareto(1.3, 200) * 800 + 50, [40_000, 38_000]])
+    res = sort_initialized_sa(lengths, budget=32, interference=F, seed=0)
+    assert sum(res.degrees) == 32
+    assert res.degrees == sorted(res.degrees, reverse=True)
+    # SA must beat the homogeneous strawmen under its own objective
+    lat = WorkerLatencyModel()
+    for mp in (1, 8):
+        alloc = homogeneous_allocation(32, mp)
+        hom = presorted_dp(lengths, len(alloc), F,
+                           base_token_time=lat.token_times(alloc, len(lengths) / len(alloc)))
+        assert res.makespan <= hom.makespan * 1.05
+    # best-so-far history is monotone non-increasing
+    assert all(a >= b - 1e-9 for a, b in zip(res.history, res.history[1:]))
+
+
+def test_latency_model_tradeoff():
+    """Fig 7: at small batch latency falls with MP (the tail's regime); at saturation
+    per-chip throughput falls with MP (the bulk's regime) — the trade-off Algorithm 2
+    navigates."""
+    lat = WorkerLatencyModel(t1=0.02)
+    t_small = [lat.base_token_time(mp, batch=8) for mp in (1, 2, 4, 8)]
+    assert t_small == sorted(t_small, reverse=True)     # latency improves with MP
+    per_chip = [1 / (lat.base_token_time(mp, batch=64) * mp) for mp in (1, 2, 4, 8)]
+    assert per_chip == sorted(per_chip, reverse=True)   # efficiency degrades with MP
+
+
+def test_sa_deterministic_given_seed():
+    rng = np.random.default_rng(1)
+    lengths = rng.pareto(1.5, 100) * 500 + 10
+    a = sort_initialized_sa(lengths, 16, F, seed=42)
+    b = sort_initialized_sa(lengths, 16, F, seed=42)
+    assert a.degrees == b.degrees and a.makespan == b.makespan

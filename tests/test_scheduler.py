@@ -1,0 +1,76 @@
+"""Progressive priority scheduling (Algorithm 1) and baseline disciplines."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import make_scheduler
+from repro.core.trajectory import Trajectory
+
+
+def _traj(pred, submit=0.0, pid=0):
+    t = Trajectory(prompt_id=pid, sample_id=0, prompt_tokens=10)
+    t.predicted_remaining = float(pred)
+    t.submit_time = submit
+    return t
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0, 1e6), min_size=1, max_size=30))
+def test_pps_pops_longest_first(preds):
+    s = make_scheduler("pps")
+    for p in preds:
+        s.submit(_traj(p), 0.0)
+    out = [s.pop(0.0).predicted_total for _ in range(len(preds))]
+    assert out == sorted(out, reverse=True)
+    assert s.pop(0.0) is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0, 1e6), min_size=1, max_size=30))
+def test_sjf_pops_shortest_first(preds):
+    s = make_scheduler("sjf")
+    for p in preds:
+        s.submit(_traj(p), 0.0)
+    out = [s.pop(0.0).predicted_total for _ in range(len(preds))]
+    assert out == sorted(out)
+
+
+def test_rr_is_submission_order():
+    s = make_scheduler("rr")
+    ts = [_traj(100 - i) for i in range(5)]
+    for i, t in enumerate(ts):
+        s.submit(t, float(i))
+    assert [s.pop(9.0).traj_id for _ in range(5)] == [t.traj_id for t in ts]
+
+
+def test_fcfs_orders_by_trajectory_arrival():
+    s = make_scheduler("fcfs")
+    a, b = _traj(1, submit=5.0), _traj(2, submit=1.0)
+    s.submit(a, 10.0)
+    s.submit(b, 11.0)           # later step submission, earlier trajectory arrival
+    assert s.pop(0.0) is b
+
+
+def test_pps_preemption_picks_lowest_priority_victim():
+    s = make_scheduler("pps")
+    active = [_traj(50), _traj(10), _traj(30)]
+    for t in active:
+        t.priority = t.predicted_total
+    incoming = _traj(100)
+    s.submit(incoming, 0.0)
+    victim = s.preempt_victim(active)
+    assert victim is active[1]                      # lowest priority active
+    # no preemption when pending does not outrank the weakest active
+    s2 = make_scheduler("pps")
+    s2.submit(_traj(5), 0.0)
+    assert s2.preempt_victim(active) is None
+
+
+def test_resubmit_updates_priority_without_duplication():
+    s = make_scheduler("pps")
+    t = _traj(10)
+    s.submit(t, 0.0)
+    t.predicted_remaining = 1000.0
+    s.submit(t, 1.0)                                # refreshed prediction re-queues
+    assert len(s) == 1
+    assert s.pop(1.0) is t
+    assert s.pop(1.0) is None

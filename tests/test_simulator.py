@@ -1,0 +1,83 @@
+"""Discrete-event rollout simulator: conservation, determinism, policy matrix."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.predictor import ProgressivePredictor
+from repro.engine.simulator import RolloutSimulator, SimConfig, simulate
+from repro.engine.workload import WorkloadConfig, generate, replay_finished
+
+
+@pytest.fixture(scope="module")
+def bench():
+    hist = replay_finished(generate(WorkloadConfig(task="coding", n_prompts=16,
+                                                   group_size=8, seed=1)))
+    pred = ProgressivePredictor().fit_trajectories(hist)
+    batch = generate(WorkloadConfig(task="coding", n_prompts=12, group_size=8, seed=2))
+    return batch, pred
+
+
+POLICIES = [
+    dict(scheduler="pps", placement="heddle"),
+    dict(scheduler="pps", placement="heddle", migration=False),
+    dict(scheduler="rr", placement="cache_aware", degrees=(1,) * 8),
+    dict(scheduler="rr", placement="least_load", degrees=(1,) * 8),
+    dict(scheduler="rr", placement="hybrid", degrees=(1,) * 8),
+    dict(scheduler="fcfs", placement="heddle", migration=False, degrees=(1,) * 8),
+    dict(scheduler="sjf", placement="heddle", migration=False, degrees=(1,) * 8),
+    dict(scheduler="pps", placement="heddle", degrees=(4, 4, 2, 2, 1, 1, 1, 1)),
+]
+
+
+@pytest.mark.parametrize("kw", POLICIES)
+def test_every_policy_completes_all_trajectories(bench, kw):
+    batch, pred = bench
+    r = simulate(copy.deepcopy(batch), pred, gpu_budget=8, max_batch=16, seed=0, **kw)
+    assert all(t.finished for t in r.trajectories)
+    assert r.makespan > 0
+    # token conservation: every planned token was generated
+    expect = sum(t.true_total_tokens for t in batch)
+    assert r.total_tokens == expect
+    # steps executed exactly as planned
+    for t in r.trajectories:
+        assert t.num_steps == t.true_num_steps
+
+
+def test_simulation_is_deterministic(bench):
+    batch, pred = bench
+    a = simulate(copy.deepcopy(batch), pred, gpu_budget=8, max_batch=16, seed=0)
+    b = simulate(copy.deepcopy(batch), pred, gpu_budget=8, max_batch=16, seed=0)
+    assert a.makespan == b.makespan
+    assert a.migrations == b.migrations
+
+
+def test_queueing_appears_under_slot_pressure(bench):
+    batch, pred = bench
+    r = simulate(copy.deepcopy(batch), pred, gpu_budget=2, max_batch=4,
+                 scheduler="rr", placement="cache_aware", degrees=(1, 1), seed=0)
+    delays = [t.total_queue_delay for t in r.trajectories]
+    assert max(delays) > 0.0
+
+
+def test_makespan_lower_bound(bench):
+    """No trajectory can beat its bare generation + tool time."""
+    batch, pred = bench
+    cfg = SimConfig(gpu_budget=8, max_batch=16, seed=0)
+    r = RolloutSimulator(copy.deepcopy(batch), pred, cfg).run()
+    t1 = cfg.base_token_time
+    for t in r.trajectories:
+        bare = t.true_total_tokens * t1 / 8 + t.total_tool_time  # fastest possible (mp8)
+        assert t.completion_time() >= bare * 0.5
+
+
+def test_interference_slows_down_crowded_workers(bench):
+    batch, pred = bench
+    fast = simulate(copy.deepcopy(batch), pred, gpu_budget=8, max_batch=16,
+                    kv_weight_ratio=0.0, seed=0, placement="cache_aware",
+                    scheduler="rr", degrees=(1,) * 8)
+    slow = simulate(copy.deepcopy(batch), pred, gpu_budget=8, max_batch=16,
+                    kv_weight_ratio=0.05, seed=0, placement="cache_aware",
+                    scheduler="rr", degrees=(1,) * 8)
+    assert slow.makespan > fast.makespan

@@ -1,0 +1,133 @@
+"""Real JAX data plane: prefill/decode/extend, preemption persistence, migration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine.sampler import SamplerConfig, sample
+from repro.engine.worker import PrefixCacheIndex, RolloutWorker
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
+    params = M.init_params(cfg, KEY)
+    return cfg, params
+
+
+def test_prefill_decode_extend_flow(setup):
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, worker_id=0)
+    w.prefill(1, [5, 7, 9, 11])
+    out = w.decode([1], 5)
+    assert len(out[1]) == 5
+    w.extend(1, [101, 102])                       # tool output absorbed, no recompute
+    out2 = w.decode([1], 3)
+    assert len(out2[1]) == 3
+    seq = w.store[1]
+    assert len(seq.tokens) == 4 + 5 + 2 + 3
+
+
+def test_batched_decode_multiple_sequences(setup):
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, worker_id=0)
+    w.prefill(1, [5, 7, 9])
+    w.prefill(2, [5, 7, 9, 13, 17])               # different length: per-slot positions
+    out = w.decode([1, 2], 4)
+    assert len(out[1]) == 4 and len(out[2]) == 4
+
+
+def test_decode_greedy_matches_model(setup):
+    """Worker greedy decode == direct model decode (the engine adds no math)."""
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                      sampler=SamplerConfig(temperature=0.0))
+    prompt = [5, 7, 9, 11]
+    w.prefill(1, prompt)
+    got = w.decode([1], 4)[1]
+
+    arr = jnp.asarray(prompt, jnp.int32)[None]
+    logits, _, cache = M.forward_full(cfg, params, {"tokens": arr}, capacity=64)
+    want = []
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        want.append(int(tok[0, 0]))
+        lg, cache = M.decode_step(cfg, params, cache, tok)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    assert got == want
+
+
+def test_migration_preserves_decoding_state(setup):
+    """KV migration: the destination continues exactly where the source stopped."""
+    cfg, params = setup
+    w0 = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                       sampler=SamplerConfig(temperature=0.0))
+    w1 = RolloutWorker(cfg, params, capacity=64, worker_id=1,
+                       sampler=SamplerConfig(temperature=0.0))
+    w0.prefill(1, [5, 7, 9, 11])
+    w0.decode([1], 3)
+    # reference: stay on w0
+    ref = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                        sampler=SamplerConfig(temperature=0.0))
+    ref.prefill(2, [5, 7, 9, 11])
+    ref.decode([2], 3)
+    pkg = w0.migrate_out(1)
+    assert 1 not in w0.store
+    w1.migrate_in(pkg)
+    got = w1.decode([1], 4)[1]
+    want = ref.decode([2], 4)[2]
+    assert got == want
+
+
+def test_preemption_persists_cache(setup):
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                      sampler=SamplerConfig(temperature=0.0))
+    w.prefill(1, [5, 7, 9, 11])
+    first = w.decode([1], 2)[1]
+    w.preempt(1)                                  # evict from batch, persist KV
+    assert 1 in w.store and w.store[1].cache is not None
+    resumed = w.decode([1], 2)[1]                 # continues from persisted state
+    assert len(first) == 2 and len(resumed) == 2
+
+
+def test_prefix_cache_index():
+    idx = PrefixCacheIndex()
+    idx.insert([1, 2, 3, 4])
+    assert idx.match_len([1, 2, 3, 4, 5]) == 4
+    assert idx.match_len([1, 2, 9]) == 2
+    assert idx.match_len([9]) == 0
+    assert idx.hits == 2 and idx.lookups == 3
+
+
+def test_sampler_top_p_and_greedy():
+    logits = jnp.asarray([[0.0, 0.0, 10.0, 0.0]])
+    assert int(sample(KEY, logits, SamplerConfig(temperature=0.0))[0]) == 2
+    # top_p=0.01 keeps only the argmax bucket
+    toks = [int(sample(jax.random.PRNGKey(i), logits,
+                       SamplerConfig(temperature=1.0, top_p=0.01))[0])
+            for i in range(10)]
+    assert set(toks) == {2}
+
+
+def test_profiler_produces_monotone_interference(setup):
+    """§5.2 loop closure: profile the REAL engine, get a usable F(batch)."""
+    from repro.engine.profiler import measured_interference, profile_decode
+    cfg, params = setup
+    prof = profile_decode(cfg, params, batch_sizes=(1, 2, 4), capacity=64,
+                          context=16, steps=2, warmup=1)
+    assert set(prof) == {1, 2, 4}
+    assert all(v > 0 for v in prof.values())
+    F = measured_interference(cfg, params, batch_sizes=(1, 2, 4), capacity=64,
+                              context=16, steps=2, warmup=1)
+    assert F(1) == 1.0
+    assert F(4) >= F(2) >= F(1)
+    # and it plugs straight into the placement DP
+    from repro.core.placement import presorted_dp
+    res = presorted_dp([100.0, 50, 10, 5], 2, F)
+    assert res.makespan > 0
