@@ -1,0 +1,83 @@
+"""Data-plane engine benchmark: slot-pool vs legacy concat/slice worker.
+
+Two headline numbers on the real JAX engine (reduced model, CPU-friendly):
+
+  * batched decode tokens/s — the legacy engine pays a ``_concat_caches`` /
+    ``_slice_cache`` round-trip per ``decode()`` call plus one host round-trip per
+    token; the slot-pool engine runs one fused jitted loop over the resident batch,
+  * admission latency — time for a new request to join a running batch and produce
+    its first token (legacy: re-concat every co-resident cache; slot-pool: one
+    ``dynamic_update_slice`` into a free lane).
+
+Rows: worker_decode_{legacy,slotpool} (us_per_call, tokens/s),
+      worker_admit_{legacy,slotpool} (us_per_call, seconds),
+      worker_decode_speedup (derived = slotpool/legacy throughput ratio).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config
+from repro.engine.legacy import LegacyRolloutWorker
+from repro.engine.sampler import SamplerConfig
+from repro.engine.worker import RolloutWorker
+from repro.models import model as M
+
+PROMPT = [5, 7, 9, 11, 13, 17, 19, 23]
+
+
+def _bench_engine(make_worker, n_seqs: int, gen_tokens: int):
+    """Returns (decode_s, tokens/s, admit_s) for one engine."""
+    w = make_worker()
+    for i in range(n_seqs):
+        w.prefill(i, PROMPT)
+    w.decode(list(range(n_seqs)), gen_tokens)           # compile + warm caches
+    _, dt = timed(lambda: w.decode(list(range(n_seqs)), gen_tokens), repeat=3)
+    tok_s = n_seqs * gen_tokens / dt
+
+    # admission: a fresh request joins the running batch and decodes one token
+    def admit(sid):
+        w.prefill(sid, PROMPT)
+        w.decode(list(range(n_seqs)) + [sid], 1)
+
+    admit(900)                                          # compile the n_seqs+1 shapes
+    w.release(900)
+    admit_s = float("inf")
+    for sid in (901, 902, 903):
+        t0 = time.perf_counter()
+        admit(sid)
+        admit_s = min(admit_s, time.perf_counter() - t0)
+        w.release(sid)
+    return dt, tok_s, admit_s
+
+
+def run(fast: bool = True) -> None:
+    n_seqs, gen_tokens = (4, 16) if fast else (8, 32)
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    greedy = SamplerConfig(temperature=0.0)             # keep RNG out of the timing
+
+    leg_dt, leg_tok, leg_admit = _bench_engine(
+        lambda: LegacyRolloutWorker(cfg, params, capacity=256, sampler=greedy),
+        n_seqs, gen_tokens)
+    sp_dt, sp_tok, sp_admit = _bench_engine(
+        lambda: RolloutWorker(cfg, params, capacity=256, max_slots=n_seqs + 1,
+                              sampler=greedy),
+        n_seqs, gen_tokens)
+
+    emit([
+        ("worker_decode_legacy", leg_dt * 1e6, f"{leg_tok:.1f} tok/s"),
+        ("worker_decode_slotpool", sp_dt * 1e6, f"{sp_tok:.1f} tok/s"),
+        ("worker_decode_speedup", 0.0, f"{sp_tok / leg_tok:.2f}x"),
+        ("worker_admit_legacy", leg_admit * 1e6, f"{leg_admit:.4f} s"),
+        ("worker_admit_slotpool", sp_admit * 1e6, f"{sp_admit:.4f} s"),
+    ])
+
+
+if __name__ == "__main__":
+    emit([], header=True)
+    run(fast=True)

@@ -14,7 +14,8 @@ import sys
 import time
 
 from benchmarks import (bench_beyond, bench_overall, bench_overhead, bench_placement,
-                        bench_predictor, bench_resources, bench_scheduler)
+                        bench_predictor, bench_resources, bench_scheduler,
+                        bench_worker)
 
 SUITES = {
     "fig12_overall": bench_overall,
@@ -24,6 +25,7 @@ SUITES = {
     "fig16_resources": bench_resources,
     "tab12_overhead": bench_overhead,
     "beyond_ctx": bench_beyond,
+    "engine_worker": bench_worker,
 }
 
 

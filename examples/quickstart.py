@@ -5,8 +5,9 @@ progressive predictor on historical rollouts, then shows the control plane decid
   HOW   — Algorithm 2 simulated annealing picks heterogeneous MP degrees (64 chips),
   WHERE — the presorted DP partitions trajectories across workers,
   WHEN  — progressive-priority scheduling orders (and preempts) execution,
-and finally compares end-to-end rollout throughput against the Verl/Slime baselines
-in the cluster simulator.
+compares end-to-end rollout throughput against the Verl/Slime baselines in the
+cluster simulator, and closes with the real data plane: a few requests served by the
+slot-pool continuous-batching engine on an actual (reduced) JAX model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -64,6 +65,29 @@ def main():
         print(f"  {name:26s} makespan {r.makespan:7.1f}s  "
               f"throughput {r.throughput:8.0f} tok/s  "
               f"(migrations {r.migrations}, preemptions {r.preemptions})")
+
+    # 6. the real data plane: slot-pool continuous batching on a reduced JAX model —
+    #    trajectories join and leave one resident decode batch, a tool result is
+    #    absorbed in place, and a preemption is just a mask flip
+    import jax
+    from repro.configs import get_config
+    from repro.engine.sampler import SamplerConfig
+    from repro.engine.worker import RolloutWorker
+    from repro.models import model as M
+
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    w = RolloutWorker(cfg, params, capacity=32, max_slots=4,
+                      sampler=SamplerConfig(temperature=0.8))
+    for rid in range(3):
+        w.prefill(rid, [5 + rid, 7, 9, 11])           # each prefill lands in a lane
+    out = w.decode([0, 1, 2], 8)                       # one fused masked decode loop
+    w.extend(0, [201, 202])                            # tool output, no prefix recompute
+    w.preempt(1)                                       # mask flip, KV stays resident
+    more = w.decode([0, 2], 4)                         # lane 1 rides along frozen
+    n = sum(map(len, out.values())) + sum(map(len, more.values()))
+    print(f"\nreal engine: {n} tokens across {len(w.store)} resident lanes "
+          f"(pool {w.max_slots} slots, {w.kv_bytes(0) / 2**20:.1f} MiB/lane)")
 
 
 if __name__ == "__main__":

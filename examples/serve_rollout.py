@@ -19,11 +19,12 @@ from repro.models import model as M
 def main():
     cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    w0 = RolloutWorker(cfg, params, capacity=128, worker_id=0,
+    w0 = RolloutWorker(cfg, params, capacity=128, max_slots=8, worker_id=0,
                        sampler=SamplerConfig(temperature=0.8, top_p=0.9))
-    w1 = RolloutWorker(cfg, params, capacity=128, worker_id=1,
+    w1 = RolloutWorker(cfg, params, capacity=128, max_slots=8, worker_id=1,
                        sampler=SamplerConfig(temperature=0.8, top_p=0.9))
-    print(f"2 workers serving {cfg.name} (reduced), capacity 128 slots")
+    print(f"2 workers serving {cfg.name} (reduced), "
+          f"slot pools of {w0.max_slots} lanes x 128 KV slots")
 
     # batched request admission (prefill)
     requests = {i: [5 + i, 7, 9, 11 + i] for i in range(6)}
@@ -44,9 +45,9 @@ def main():
     print(f"request 0: tool output absorbed (context now {len(w0.store[0].tokens)} "
           f"tokens, kv {w0.kv_bytes(0)/2**20:.1f} MiB)")
 
-    # preemption: request 5 loses its compute slot but keeps its KV resident
+    # preemption: a mask flip — request 5 leaves the decode batch, its lane stays put
     w0.preempt(5)
-    print("request 5 preempted (KV persisted) — resumes without recompute")
+    print("request 5 preempted (mask flip, KV lane persisted) — resumes without recompute")
 
     # opportunistic migration: request 0 moves to w1 during its tool interval
     t0 = time.time()

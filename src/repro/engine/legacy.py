@@ -1,0 +1,189 @@
+"""Legacy per-sequence-cache rollout worker (the pre-slot-pool data plane).
+
+Kept as the reference implementation for the slot-pool engine: every batched
+``decode()`` call concatenates the per-sequence caches into a step batch and slices
+them back afterwards — O(B * capacity) device copies per call, the step-centric
+overhead the slot-pool engine in ``repro.engine.worker`` eliminates.  The parity
+tests (tests/test_slot_pool.py) pin token-exact equivalence between the two, and
+``benchmarks/bench_worker.py`` measures the gap.
+
+Sampling uses the same per-sequence key discipline as the slot-pool engine
+(key = fold_in(fold_in(PRNGKey(seed + worker_id), seq_id), context_len)) so the two
+paths draw identical tokens at temperature > 0.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.sampler import SamplerConfig, sample_slots
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------- jitted steps
+
+@partial(jax.jit, static_argnames=("cfg", "capacity"))
+def _prefill(cfg: ModelConfig, params, tokens, capacity: int):
+    logits, aux, cache = M.forward_full(cfg, params, {"tokens": tokens},
+                                        capacity=capacity)
+    return logits[:, -1], _bcast_pos(cache, tokens.shape[0])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decode(cfg: ModelConfig, params, cache, tokens):
+    return M.decode_step(cfg, params, cache, tokens)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _extend(cfg: ModelConfig, params, cache, tokens):
+    """Teacher-forced absorption of ``tokens`` (B, L) into the cache (chunked prefill)."""
+
+    def body(cache, tok):
+        logits, cache = M.decode_step(cfg, params, cache, tok[:, None])
+        return cache, logits
+
+    cache, logits = jax.lax.scan(body, cache, tokens.T)
+    return logits[-1], cache
+
+
+def _bcast_pos(cache, batch):
+    cache = dict(cache)
+    cache["pos"] = jnp.broadcast_to(cache["pos"], (batch,)).astype(jnp.int32)
+    return cache
+
+
+def _slice_cache(cache, idx):
+    """Select batch entries ``idx`` from a cache pytree (batch is axis 1 of blocks)."""
+    pos = cache["pos"][idx]
+    blocks = jax.tree.map(lambda x: x[:, idx], cache["blocks"])
+    return {"pos": pos, "blocks": blocks}
+
+
+def _concat_caches(caches):
+    pos = jnp.concatenate([c["pos"] for c in caches])
+    blocks = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                          *[c["blocks"] for c in caches])
+    return {"pos": pos, "blocks": blocks}
+
+
+# ---------------------------------------------------------------- worker
+
+@dataclass
+class Sequence:
+    seq_id: int
+    tokens: list[int]                    # full context (prompt + generated + tool)
+    key: np.ndarray                      # (2,) uint32 per-sequence sampling key
+    generated: int = 0
+    cache: Optional[dict] = None         # single-sequence cache (batch dim 1)
+    finished: bool = False
+
+
+class LegacyRolloutWorker:
+    """One rollout worker holding model params and a per-sequence cache store."""
+
+    def __init__(self, cfg: ModelConfig, params, capacity: int = 256,
+                 worker_id: int = 0, sampler: SamplerConfig = SamplerConfig(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.worker_id = worker_id
+        self.sampler = sampler
+        self.base_key = jax.random.PRNGKey(seed + worker_id)
+        self.store: dict[int, Sequence] = {}       # resident sequences (incl. preempted)
+        from repro.engine.worker import PrefixCacheIndex
+        self.prefix_index = PrefixCacheIndex()
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def prefill(self, seq_id: int, tokens: list[int]) -> None:
+        """Admit a sequence: full-sequence forward builds its KV/state cache."""
+        self.prefix_index.match_len(tokens)
+        arr = jnp.asarray(tokens, jnp.int32)[None]
+        _, cache = _prefill(self.cfg, self.params, arr, self.capacity)
+        key = np.asarray(jax.random.fold_in(self.base_key, seq_id))
+        self.store[seq_id] = Sequence(seq_id, list(tokens), key, cache=cache)
+        self.prefix_index.insert(tokens)
+
+    def extend(self, seq_id: int, tool_tokens: list[int]) -> None:
+        """Absorb tool output into an existing cache (no prefix recompute)."""
+        seq = self.store[seq_id]
+        assert seq.cache is not None, "extend() on a sequence without resident cache"
+        arr = jnp.asarray(tool_tokens, jnp.int32)[None]
+        _, seq.cache = _extend(self.cfg, self.params, seq.cache, arr)
+        seq.tokens.extend(int(t) for t in tool_tokens)
+
+    def decode(self, seq_ids: list[int], n_tokens: int, stop_token: int | None = None
+               ) -> dict[int, list[int]]:
+        """Batched decode of resident sequences for up to ``n_tokens`` steps."""
+        seqs = [self.store[s] for s in seq_ids]
+        cache = _concat_caches([s.cache for s in seqs])
+        last = jnp.asarray([[s.tokens[-1]] for s in seqs], jnp.int32)
+        keys = jnp.asarray(np.stack([s.key for s in seqs]))
+        out: dict[int, list[int]] = {s: [] for s in seq_ids}
+        live = np.ones(len(seqs), bool)
+        for _ in range(n_tokens):
+            step_keys = jax.vmap(jax.random.fold_in)(
+                keys, jnp.asarray([len(s.tokens) for s in seqs], jnp.int32))
+            logits, cache = _decode(self.cfg, self.params, cache, last)
+            toks = sample_slots(step_keys, logits, self.sampler)
+            self.decode_steps += 1
+            toks_np = np.asarray(toks)
+            for i, s in enumerate(seqs):
+                if not live[i]:
+                    continue
+                t = int(toks_np[i])
+                out[s.seq_id].append(t)
+                s.tokens.append(t)
+                s.generated += 1
+                if stop_token is not None and t == stop_token:
+                    live[i] = False
+            last = toks_np[:, None]
+            if not live.any():
+                break
+        # split the batched cache back into per-sequence stores
+        for i, s in enumerate(seqs):
+            s.cache = _slice_cache(cache, jnp.asarray([i]))
+            self.prefix_index.insert(s.tokens)
+        return out
+
+    # ------------------------------------------------------------ control ops
+    def preempt(self, seq_id: int) -> None:
+        """Evict from the running batch but persist the KV cache (Alg. 1 line 7)."""
+        assert seq_id in self.store
+
+    def release(self, seq_id: int) -> None:
+        self.store.pop(seq_id, None)
+
+    def migrate_out(self, seq_id: int) -> dict:
+        """Package a sequence's context + cache for transfer (§5.3 KV migration)."""
+        seq = self.store.pop(seq_id)
+        package = {
+            "seq_id": seq.seq_id,
+            "tokens": list(seq.tokens),
+            "generated": seq.generated,
+            "key": np.asarray(seq.key),
+            "cache": jax.tree.map(np.asarray, seq.cache),   # device -> host buffer
+        }
+        return package
+
+    def migrate_in(self, package: dict) -> None:
+        cache = jax.tree.map(jnp.asarray, package["cache"])  # host -> this worker
+        key = package.get("key")
+        if key is None:
+            key = np.asarray(jax.random.fold_in(self.base_key, package["seq_id"]))
+        seq = Sequence(package["seq_id"], list(package["tokens"]), np.asarray(key),
+                       generated=package["generated"], cache=cache)
+        self.store[package["seq_id"]] = seq
+        self.prefix_index.insert(seq.tokens)
+
+    def kv_bytes(self, seq_id: int) -> int:
+        seq = self.store[seq_id]
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(seq.cache))

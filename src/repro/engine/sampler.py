@@ -1,4 +1,13 @@
-"""Temperature / top-p token sampling (paper §7: temperature 1.0, top-p 0.9)."""
+"""Temperature / top-p token sampling (paper §7: temperature 1.0, top-p 0.9).
+
+Two entry points:
+
+  * ``sample``        — one shared key for a (B, V) batch; the legacy step-batched path.
+  * ``sample_slots``  — per-slot keys plus an active-lane mask; the slot-pool engine
+    samples every resident lane independently, so a lane's token stream is a pure
+    function of (its key, its context) and survives re-batching, preemption and
+    migration without perturbing its randomness.
+"""
 
 from __future__ import annotations
 
@@ -14,6 +23,16 @@ class SamplerConfig:
     top_p: float = 0.9
 
 
+def top_p_filter(logits: jax.Array, top_p: float) -> jax.Array:
+    """Mask logits outside the smallest prefix with cumulative mass >= top_p."""
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.argmax(cum >= top_p, axis=-1)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[..., None], axis=-1)
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
 def sample(key: jax.Array, logits: jax.Array, cfg: SamplerConfig = SamplerConfig()
            ) -> jax.Array:
     """logits: (B, V) -> tokens (B,) int32."""
@@ -21,11 +40,26 @@ def sample(key: jax.Array, logits: jax.Array, cfg: SamplerConfig = SamplerConfig
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / cfg.temperature
     if cfg.top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # keep the smallest prefix with cumulative mass >= top_p
-        cutoff_idx = jnp.argmax(cum >= cfg.top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+        logits = top_p_filter(logits, cfg.top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(keys: jax.Array, logits: jax.Array,
+                 cfg: SamplerConfig = SamplerConfig(),
+                 active: jax.Array | None = None) -> jax.Array:
+    """Masked per-slot sampling for the slot-pool decode loop.
+
+    keys: (B, 2) uint32 per-slot PRNG keys; logits: (B, V); active: optional (B,)
+    bool.  Returns (B,) int32 — inactive lanes yield -1 (never a valid token), which
+    the engine uses as the "nothing emitted" sentinel.
+    """
+    if cfg.temperature <= 0.0:
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        scaled = logits.astype(jnp.float32) / cfg.temperature
+        if cfg.top_p < 1.0:
+            scaled = top_p_filter(scaled, cfg.top_p)
+        toks = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    if active is not None:
+        toks = jnp.where(active, toks, -1)
+    return toks

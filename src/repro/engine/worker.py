@@ -1,27 +1,37 @@
-"""Real JAX rollout worker: the data plane executed on actual (reduced) models.
+"""Slot-pool rollout worker: the real JAX data plane with true continuous batching.
 
-Implements the mechanisms the simulator only models:
-  * slot-based continuous batching with per-slot decode positions,
-  * prefill -> KV cache, incremental extension (tool outputs absorbed without
-    recomputing the prefix),
-  * preemption that *persists* the evicted trajectory's KV cache (Algorithm 1 line 7),
-  * KV-cache migration between workers (the data part of §5.3),
+The engine owns one preallocated **slot-pool KV cache** — ``max_slots`` lanes built by
+``model.init_cache`` — instead of a per-sequence cache store:
+
+  * admission: prefill writes its cache straight into a free lane
+    (``lax.dynamic_update_slice`` via ``model.write_slot``; the pool buffer is donated,
+    so XLA updates the lane in place),
+  * decode: one persistent jitted loop (``lax.scan``) over the whole resident batch
+    with an active-slot mask — no ``concat``/``slice`` round-trips per call,
+  * preemption: a mask flip — the lane stays resident, nothing moves,
+  * migration: ``model.gather_slots`` lifts one lane out; the destination implants it
+    into a free lane without disturbing co-resident sequences (§5.3),
+  * tool absorption: masked teacher-forcing into a single lane (no prefix recompute),
   * prefix-cache hit accounting via a token-trie.
 
-Used by integration tests and examples; the cluster simulator handles paper-scale runs.
+Sampling is per-slot: every sequence draws from
+``fold_in(fold_in(PRNGKey(seed + worker_id), seq_id), context_len)``, making its token
+stream independent of co-resident lanes and stable across preemption and migration
+(the key travels in the migration package).  ``repro.engine.legacy`` keeps the old
+concat/slice engine as the parity reference; see docs/engine.md for invariants.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.engine.sampler import SamplerConfig, sample
+from repro.engine.sampler import SamplerConfig, sample_slots
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -57,50 +67,67 @@ class PrefixCacheIndex:
         return n
 
 
-# ---------------------------------------------------------------- jitted steps
+# ---------------------------------------------------------------- jitted kernels
+# Module-level jits keyed on (cfg, shapes): workers sharing a config share compiles.
 
-@partial(jax.jit, static_argnames=("cfg", "capacity"))
-def _prefill(cfg: ModelConfig, params, tokens, capacity: int):
-    logits, aux, cache = M.forward_full(cfg, params, {"tokens": tokens},
-                                        capacity=capacity)
-    return logits[:, -1], _bcast_pos(cache, tokens.shape[0])
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def _decode(cfg: ModelConfig, params, cache, tokens):
-    return M.decode_step(cfg, params, cache, tokens)
+@partial(jax.jit, static_argnames=("cfg", "capacity"), donate_argnums=(2,))
+def _admit(cfg: ModelConfig, params, pool, tokens, slot, capacity: int):
+    """Prefill ``tokens`` (1, S) and write the resulting cache into lane ``slot``."""
+    _, _, lane = M.forward_full(cfg, params, {"tokens": tokens}, capacity=capacity)
+    return M.write_slot(pool, lane, slot)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _extend(cfg: ModelConfig, params, cache, tokens):
-    """Teacher-forced absorption of ``tokens`` (B, L) into the cache (chunked prefill)."""
-
-    def body(cache, tok):
-        logits, cache = M.decode_step(cfg, params, cache, tok[:, None])
-        return cache, logits
-
-    cache, logits = jax.lax.scan(body, cache, tokens.T)
-    return logits[-1], cache
+@partial(jax.jit, donate_argnums=(0,))
+def _implant(pool, lane, slot):
+    """Write a migrated batch-1 cache into lane ``slot`` (migration ingress)."""
+    return M.write_slot(pool, lane, slot)
 
 
-def _bcast_pos(cache, batch):
-    cache = dict(cache)
-    cache["pos"] = jnp.broadcast_to(cache["pos"], (batch,)).astype(jnp.int32)
-    return cache
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _extend_slot(cfg: ModelConfig, params, pool, tool_tokens, slot):
+    """Teacher-force ``tool_tokens`` (L,) into lane ``slot`` only (active mask)."""
+    B = pool["pos"].shape[0]
+    active = jnp.arange(B) == slot
+
+    def body(pool, tok):
+        _, pool = M.decode_step(cfg, params, pool,
+                                jnp.broadcast_to(tok, (B,))[:, None], active=active)
+        return pool, None
+
+    pool, _ = lax.scan(body, pool, tool_tokens)
+    return pool
 
 
-def _slice_cache(cache, idx):
-    """Select batch entries ``idx`` from a cache pytree (batch is axis 1 of blocks)."""
-    pos = cache["pos"][idx]
-    blocks = jax.tree.map(lambda x: x[:, idx], cache["blocks"])
-    return {"pos": pos, "blocks": blocks}
+@partial(jax.jit, static_argnames=("cfg", "n_tokens", "stop_token", "sampler"),
+         donate_argnums=(2,))
+def _decode_loop(cfg: ModelConfig, params, pool, last, live, keys,
+                 n_tokens: int, stop_token: int | None, sampler: SamplerConfig):
+    """The persistent decode loop: ``n_tokens`` masked steps over the whole pool.
+
+    last: (B,) int32 last context token per lane; live: (B,) bool active mask;
+    keys: (B, 2) uint32 per-sequence base keys.  Returns (pool', emitted (T, B))
+    where emitted is -1 for lanes that were inactive (or already stopped) at a step.
+    """
+
+    def body(carry, _):
+        pool, last, live = carry
+        step_keys = jax.vmap(jax.random.fold_in)(keys, pool["pos"])
+        logits, pool = M.decode_step(cfg, params, pool, last[:, None], active=live)
+        toks = sample_slots(step_keys, logits, sampler, active=live)
+        last = jnp.where(live, toks, last)
+        if stop_token is not None:
+            live = live & (toks != stop_token)
+        return (pool, last, live), toks
+
+    (pool, last, live), emitted = lax.scan(body, (pool, last, live), None,
+                                           length=n_tokens)
+    return pool, last, live, emitted
 
 
-def _concat_caches(caches):
-    pos = jnp.concatenate([c["pos"] for c in caches])
-    blocks = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
-                          *[c["blocks"] for c in caches])
-    return {"pos": pos, "blocks": blocks}
+# host-side chunk size for stop-token decodes: one device round-trip per CHUNK steps
+# buys back the legacy early exit (all requested lanes stopped -> stop paying for
+# masked full-pool steps) while bounding jit variants to {CHUNK, tail}
+_DECODE_CHUNK = 8
 
 
 # ---------------------------------------------------------------- worker
@@ -109,106 +136,165 @@ def _concat_caches(caches):
 class Sequence:
     seq_id: int
     tokens: list[int]                    # full context (prompt + generated + tool)
+    slot: int                            # lane index in the worker's slot pool
+    key: np.ndarray                      # (2,) uint32 per-sequence sampling key
     generated: int = 0
-    cache: Optional[dict] = None         # single-sequence cache (batch dim 1)
+    preempted: bool = False
     finished: bool = False
 
 
 class RolloutWorker:
-    """One rollout worker holding model params and a per-sequence cache store."""
+    """One rollout worker holding model params and a slot-pool KV cache."""
 
     def __init__(self, cfg: ModelConfig, params, capacity: int = 256,
-                 worker_id: int = 0, sampler: SamplerConfig = SamplerConfig(),
-                 seed: int = 0):
+                 max_slots: int = 8, worker_id: int = 0,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
+        self.max_slots = max_slots
         self.worker_id = worker_id
         self.sampler = sampler
-        self.key = jax.random.PRNGKey(seed + worker_id)
+        self.base_key = jax.random.PRNGKey(seed + worker_id)
+        self.pool = M.init_cache(cfg, params, max_slots, capacity)
         self.store: dict[int, Sequence] = {}       # resident sequences (incl. preempted)
         self.prefix_index = PrefixCacheIndex()
         self.decode_steps = 0
+        self.pool_grows = 0
+
+    # ------------------------------------------------------------ slot bookkeeping
+    def _alloc_slot(self) -> int:
+        """Lowest free lane; grows the pool (doubling) when every lane is resident.
+
+        Free lanes are derived from the store, so ``store.clear()`` (weight-sync reset
+        in the RL loop) releases every lane with no extra bookkeeping."""
+        used = {s.slot for s in self.store.values()}
+        for slot in range(self.max_slots):
+            if slot not in used:
+                return slot
+        slot = self.max_slots
+        fresh = M.init_cache(self.cfg, self.params, self.max_slots, self.capacity)
+        self.pool = M.concat_pools(self.pool, fresh)
+        self.max_slots *= 2
+        self.pool_grows += 1
+        return slot
 
     # ------------------------------------------------------------ lifecycle
     def prefill(self, seq_id: int, tokens: list[int]) -> None:
-        """Admit a sequence: full-sequence forward builds its KV/state cache."""
+        """Admit a sequence: full-sequence forward writes straight into a free lane."""
         self.prefix_index.match_len(tokens)
+        slot = self._alloc_slot()
         arr = jnp.asarray(tokens, jnp.int32)[None]
-        _, cache = _prefill(self.cfg, self.params, arr, self.capacity)
-        self.store[seq_id] = Sequence(seq_id, list(tokens), cache=cache)
+        self.pool = _admit(self.cfg, self.params, self.pool, arr, slot, self.capacity)
+        key = np.asarray(jax.random.fold_in(self.base_key, seq_id))
+        self.store[seq_id] = Sequence(seq_id, list(tokens), slot, key)
         self.prefix_index.insert(tokens)
 
     def extend(self, seq_id: int, tool_tokens: list[int]) -> None:
-        """Absorb tool output into an existing cache (no prefix recompute)."""
+        """Absorb tool output into a resident lane (no prefix recompute)."""
         seq = self.store[seq_id]
-        assert seq.cache is not None, "extend() on a sequence without resident cache"
-        arr = jnp.asarray(tool_tokens, jnp.int32)[None]
-        _, seq.cache = _extend(self.cfg, self.params, seq.cache, arr)
+        arr = jnp.asarray(tool_tokens, jnp.int32)
+        self.pool = _extend_slot(self.cfg, self.params, self.pool, arr, seq.slot)
         seq.tokens.extend(int(t) for t in tool_tokens)
 
     def decode(self, seq_ids: list[int], n_tokens: int, stop_token: int | None = None
                ) -> dict[int, list[int]]:
-        """Batched decode of resident sequences for up to ``n_tokens`` steps."""
-        seqs = [self.store[s] for s in seq_ids]
-        cache = _concat_caches([s.cache for s in seqs])
-        last = jnp.asarray([[s.tokens[-1]] for s in seqs], jnp.int32)
-        out: dict[int, list[int]] = {s: [] for s in seq_ids}
-        live = np.ones(len(seqs), bool)
-        for _ in range(n_tokens):
-            logits, cache = _decode(self.cfg, self.params, cache, last)
-            self.key, sub = jax.random.split(self.key)
-            toks = sample(sub, logits, self.sampler)
-            self.decode_steps += 1
-            toks_np = np.asarray(toks)
-            for i, s in enumerate(seqs):
-                if not live[i]:
-                    continue
-                t = int(toks_np[i])
-                out[s.seq_id].append(t)
-                s.tokens.append(t)
-                s.generated += 1
-                if stop_token is not None and t == stop_token:
-                    live[i] = False
-            last = toks_np[:, None]
-            if not live.any():
+        """Batched decode of the requested resident sequences for ``n_tokens`` steps.
+
+        Runs one fused device loop over the whole pool; lanes not requested (free,
+        preempted, or co-resident but idle) ride along masked-out at frozen ``pos``.
+        Requesting a preempted sequence implicitly resumes it (mask flip back).
+        """
+        B = self.max_slots
+        last = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        keys = np.zeros((B, 2), np.uint32)
+        for seq in self.store.values():
+            last[seq.slot] = seq.tokens[-1]
+            keys[seq.slot] = seq.key
+        for sid in seq_ids:
+            seq = self.store[sid]
+            seq.preempted = False
+            live[seq.slot] = True
+        last, live, keys = jnp.asarray(last), jnp.asarray(live), jnp.asarray(keys)
+        # without a stop token nothing can finish early: one fused dispatch; with one,
+        # chunk so the loop exits once every requested lane has stopped
+        chunk = n_tokens if stop_token is None else _DECODE_CHUNK
+        parts = []
+        remaining = n_tokens
+        while remaining > 0:
+            step = min(chunk, remaining)
+            self.pool, last, live, em = _decode_loop(
+                self.cfg, self.params, self.pool, last, live, keys,
+                step, stop_token, self.sampler)
+            parts.append(np.asarray(em))                    # (step, B)
+            remaining -= step
+            self.decode_steps += step
+            if remaining > 0 and not bool(np.asarray(live).any()):
                 break
-        # split the batched cache back into per-sequence stores
-        for i, s in enumerate(seqs):
-            s.cache = _slice_cache(cache, jnp.asarray([i]))
-            self.prefix_index.insert(s.tokens)
+        emitted = np.concatenate(parts, axis=0)
+        out: dict[int, list[int]] = {}
+        for sid in seq_ids:
+            seq = self.store[sid]
+            toks = [int(t) for t in emitted[:, seq.slot] if t >= 0]
+            out[sid] = toks
+            seq.tokens.extend(toks)
+            seq.generated += len(toks)
+            if stop_token is not None and toks and toks[-1] == stop_token:
+                seq.finished = True
+            self.prefix_index.insert(seq.tokens)
         return out
 
     # ------------------------------------------------------------ control ops
     def preempt(self, seq_id: int) -> None:
         """Evict from the running batch but persist the KV cache (Alg. 1 line 7).
 
-        The store keeps the cache resident; only the compute slot is released (our
-        batches are formed per decode() call, so persistence is the no-op that matters).
-        """
-        assert seq_id in self.store
+        A pure mask flip: the lane stays resident at frozen ``pos``; the next
+        ``decode()`` naming this sequence flips the mask back — zero data movement."""
+        self.store[seq_id].preempted = True
 
     def release(self, seq_id: int) -> None:
+        """Finish a sequence and free its lane (next admission overwrites it)."""
         self.store.pop(seq_id, None)
 
     def migrate_out(self, seq_id: int) -> dict:
-        """Package a sequence's context + cache for transfer (§5.3 KV migration)."""
+        """Package one lane's context + cache for transfer (§5.3 KV migration).
+
+        Gathers a single lane — co-resident sequences are untouched."""
         seq = self.store.pop(seq_id)
-        package = {
+        lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
+        return {
             "seq_id": seq.seq_id,
             "tokens": list(seq.tokens),
             "generated": seq.generated,
-            "cache": jax.tree.map(np.asarray, seq.cache),   # device -> host buffer
+            "key": np.asarray(seq.key),
+            "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
         }
-        return package
 
     def migrate_in(self, package: dict) -> None:
-        cache = jax.tree.map(jnp.asarray, package["cache"])  # host -> this worker
-        seq = Sequence(package["seq_id"], package["tokens"],
-                       generated=package["generated"], cache=cache)
+        """Implant a migrated lane into a free slot (capacities must match)."""
+        def check(dst, src):                  # fail fast on capacity/arch mismatch
+            if (dst.shape[0],) + dst.shape[2:] != (src.shape[0],) + src.shape[2:]:
+                raise ValueError(
+                    f"migrate_in: lane shape {src.shape} does not fit pool lane "
+                    f"{dst.shape} — source and destination workers must share "
+                    f"capacity and architecture")
+
+        jax.tree.map(check, self.pool["blocks"], package["cache"]["blocks"])
+        slot = self._alloc_slot()
+        lane = jax.tree.map(jnp.asarray, package["cache"])  # host -> this worker
+        self.pool = _implant(self.pool, lane, slot)
+        key = package.get("key")
+        if key is None:                                     # foreign package: re-key
+            key = np.asarray(jax.random.fold_in(self.base_key, package["seq_id"]))
+        seq = Sequence(package["seq_id"], list(package["tokens"]), slot,
+                       np.asarray(key), generated=package["generated"])
         self.store[package["seq_id"]] = seq
         self.prefix_index.insert(seq.tokens)
 
     def kv_bytes(self, seq_id: int) -> int:
-        seq = self.store[seq_id]
-        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(seq.cache))
+        """Per-lane cache footprint (one slot's share of the pool)."""
+        assert seq_id in self.store
+        B = self.max_slots
+        return sum((x.size // B) * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.pool))

@@ -106,6 +106,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False, verbose: bool =
         for k in ("argument_size_in_bytes", "output_size_in_bytes",
                   "temp_size_in_bytes", "generated_code_size_in_bytes"):
             rec[k] = int(getattr(mem, k, 0) or 0)
+    if isinstance(cost, list):          # older XLA clients: one dict per partition
+        cost = cost[0] if cost else None
     if cost:
         rec["hlo_flops"] = float(cost.get("flops", 0.0))
         rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))

@@ -47,9 +47,6 @@ def main(argv=None):
 
     cfg = get_config(args.arch).reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    workers = [RolloutWorker(cfg, params, capacity=128, worker_id=i,
-                             sampler=SamplerConfig(temperature=0.8), seed=args.seed)
-               for i in range(args.workers)]
     rng = np.random.default_rng(args.seed)
     prompts = {i: [5 + int(t) for t in rng.integers(0, 100, rng.integers(3, 9))]
                for i in range(args.requests)}
@@ -61,6 +58,14 @@ def main(argv=None):
     for w, group in enumerate(placement.groups):
         for idx in group:
             assignment[idx] = w
+
+    # size each worker's slot pool for its assigned group (pools auto-grow if the
+    # scheduler later routes extra trajectories their way)
+    group_sizes = [max(2, len(g)) for g in placement.groups]
+    workers = [RolloutWorker(cfg, params, capacity=128, max_slots=group_sizes[i],
+                             worker_id=i, sampler=SamplerConfig(temperature=0.8),
+                             seed=args.seed)
+               for i in range(args.workers)]
 
     t0 = time.time()
     for rid, prompt in prompts.items():

@@ -444,7 +444,24 @@ def _slstm_state_from_full(cfg, p, h):
 
 # ------------------------------------------------------------------ decode
 
-def _layer_step(cfg, kind, p, x, cache, pos):
+def _merge_state(active, new, old):
+    """Keep ``old`` state on inactive lanes (slot-pool masked decode).
+
+    Only recurrent mixers need this: their state update is destructive.  Attention KV
+    caches are *self-healing* under a frozen ``pos`` — a masked step writes at the same
+    slot the resuming token will overwrite — so they skip the merge (see docs/engine.md).
+    """
+    if active is None:
+        return new
+
+    def sel(n, o):
+        m = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o.astype(n.dtype))
+
+    return jax.tree.map(sel, new, old)
+
+
+def _layer_step(cfg, kind, p, x, cache, pos, active=None):
     mixer, _, mlp_kind = kind.partition("+")
     new_cache = cache
     h = L.block_norm(cfg, p["norm1"], x)
@@ -463,12 +480,15 @@ def _layer_step(cfg, kind, p, x, cache, pos):
         x = x + jnp.tanh(p["mixer"]["xgate"]) * out
     elif mixer == "mamba":
         out, new_cache = L.mamba_step(p["mixer"], h, cfg, cache)
+        new_cache = _merge_state(active, new_cache, cache)
         x = x + out
     elif mixer == "mlstm":
         out, new_cache = L.mlstm_step(p["mixer"], h, cfg, cache)
+        new_cache = _merge_state(active, new_cache, cache)
         x = x + out
     elif mixer == "slstm":
         out, new_cache = L.slstm_step(p["mixer"], h, cfg, cache)
+        new_cache = _merge_state(active, new_cache, cache)
         x = x + out
     else:
         raise ValueError(mixer)
@@ -482,9 +502,17 @@ def _layer_step(cfg, kind, p, x, cache, pos):
     return x, new_cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens):
+def decode_step(cfg: ModelConfig, params, cache, tokens, active=None):
     """One decode step.  tokens: (B, 1) int32; cache["pos"]: (B,) per-slot positions
-    (continuous batching).  Returns (logits (B, V), cache')."""
+    (continuous batching).  Returns (logits (B, V), cache').
+
+    ``active``: optional (B,) bool slot mask.  Inactive lanes do not advance ``pos``
+    and keep their recurrent state; their attention KV write lands at the frozen
+    ``pos`` slot and is overwritten when the lane resumes, so a preempted / finished /
+    free lane can ride along in the batch at zero bookkeeping cost (slot-pool
+    continuous batching — the lane's emitted logits are garbage and must be masked
+    by the caller).
+    """
     pos = cache["pos"]
     x = params["tok_embed"][tokens]
     x = shard(x, ("batch", None, None))
@@ -498,12 +526,13 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
         for i, kind in enumerate(cfg.block_pattern):
             keyname = f"{i:02d}_{kind}"
             x, new_c[keyname] = _layer_step(cfg, kind, p_period[keyname], x,
-                                            c_period[keyname], pos)
+                                            c_period[keyname], pos, active)
         return x, new_c
 
     x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
     logits = _logits(cfg, params, x)
-    return logits[:, 0], {"pos": pos + 1, "blocks": new_blocks}
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    return logits[:, 0], {"pos": new_pos, "blocks": new_blocks}
 
 
 def _sinusoidal_at(pos, d, dtype):
@@ -563,3 +592,47 @@ def init_cache(cfg: ModelConfig, params, batch_size: int, capacity: int,
     blocks = {f"{i:02d}_{kind}": per_kind(kind)
               for i, kind in enumerate(cfg.block_pattern)}
     return {"pos": jnp.full((batch_size,), start_pos, jnp.int32), "blocks": blocks}
+
+
+# ------------------------------------------------------------------ slot-pool ops
+#
+# A slot-pool cache is an ordinary decode cache whose batch dimension is a pool of
+# ``max_slots`` lanes.  Sequences are admitted by writing a batch-1 cache into a free
+# lane (``write_slot``), decode runs over the whole pool with an active-slot mask
+# (``decode_step(..., active=mask)``), preemption is a mask flip, and migration moves
+# one lane (``gather_slots`` -> host -> ``write_slot`` on the destination pool).
+# Blocks leaves are laid out (n_periods, B, ...): the lane axis is axis 1; ``pos`` is
+# (B,).
+
+def write_slot(pool: dict, lane: dict, slot) -> dict:
+    """Write a batch-1 cache ``lane`` into lane ``slot`` of a slot-pool cache.
+
+    Uses ``lax.dynamic_update_slice`` so, under jit with the pool donated, XLA updates
+    the lane in place — admission cost is O(lane), not O(pool).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+
+    def upd(dst, src):
+        start = (zero, slot) + (zero,) * (dst.ndim - 2)
+        return lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    blocks = jax.tree.map(upd, pool["blocks"], lane["blocks"])
+    pos = lax.dynamic_update_slice(
+        pool["pos"], lane["pos"].astype(pool["pos"].dtype), (slot,))
+    return {"pos": pos, "blocks": blocks}
+
+
+def gather_slots(pool: dict, idx) -> dict:
+    """Extract lanes ``idx`` from a slot-pool cache as a standalone batch-len(idx)
+    cache (KV migration packages one lane; parity tests compare lanes)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return {"pos": pool["pos"][idx],
+            "blocks": jax.tree.map(lambda x: x[:, idx], pool["blocks"])}
+
+
+def concat_pools(a: dict, b: dict) -> dict:
+    """Concatenate two slot-pool caches along the lane axis (pool growth)."""
+    return {"pos": jnp.concatenate([a["pos"], b["pos"]]),
+            "blocks": jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=1),
+                                   a["blocks"], b["blocks"])}

@@ -1,0 +1,80 @@
+"""Deterministic mini-hypothesis used when the real `hypothesis` is not installed.
+
+The property-test modules import via
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+so tier-1 collection never fails on a missing optional dependency, and the
+invariants still run against a seeded deterministic sample instead of being
+skipped.  Install the real engine (``pip install -r requirements-dev.txt``) for
+full shrinking/coverage; this fallback supports exactly the strategy surface the
+repo's tests use: ``integers``, ``floats``, ``lists``, ``tuples``.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+_FALLBACK_EXAMPLES = 25          # per-test cap: cheap but enough to trip invariants
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+st = _Strategies()
+
+
+def settings(**kwargs):
+    """Accepts (and mostly ignores) hypothesis settings; honours max_examples."""
+    def deco(fn):
+        fn._fallback_max_examples = min(kwargs.get("max_examples",
+                                                   _FALLBACK_EXAMPLES),
+                                        _FALLBACK_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Run the test body over a deterministic, per-test seeded example stream."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _FALLBACK_EXAMPLES)
+            rng = random.Random(fn.__qualname__)      # deterministic per test
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+        # hide the wrapped signature: pytest must not read the strategy-filled
+        # parameters as fixtures (real hypothesis rewrites the signature too)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,6 +1,9 @@
 """Trajectory migration (§5.3): transmission scheduler + scaled-capacity router."""
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
                                   TransmissionScheduler, kv_cache_bytes,

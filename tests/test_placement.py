@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.placement import (InterferenceModel, aggregate_short,
                                   brute_force_partition, evaluate_partition, place,

@@ -1,0 +1,56 @@
+"""Property tests for the prefix-cache token-trie (radix-cache bookkeeping)."""
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.engine.worker import PrefixCacheIndex
+
+TOKENS = st.lists(st.integers(0, 30), min_size=0, max_size=12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(TOKENS, min_size=0, max_size=8), TOKENS)
+def test_match_len_bounded_by_query_and_corpus(corpus, query):
+    idx = PrefixCacheIndex()
+    for toks in corpus:
+        idx.insert(toks)
+    n = idx.match_len(query)
+    assert 0 <= n <= len(query)
+    if corpus:
+        assert n <= max(len(t) for t in corpus)
+    else:
+        assert n == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(TOKENS)
+def test_insert_then_match_is_a_full_hit(tokens):
+    idx = PrefixCacheIndex()
+    idx.insert(tokens)
+    assert idx.match_len(tokens) == len(tokens)
+    # every prefix of an inserted sequence is also a full hit
+    assert idx.match_len(tokens[: len(tokens) // 2]) == len(tokens) // 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), TOKENS), min_size=0, max_size=20))
+def test_hit_accounting_is_monotone_and_consistent(ops):
+    """lookups counts every match_len; hits/hit_tokens only grow, and only on
+    nonzero matches (hits <= lookups, hit_tokens >= hits)."""
+    idx = PrefixCacheIndex()
+    lookups = 0
+    prev = (0, 0)
+    for op, toks in ops:
+        if op == 0:
+            idx.insert(toks)
+        else:
+            n = idx.match_len(toks)
+            lookups += 1
+            assert (idx.hits, idx.hit_tokens) >= prev
+            assert (idx.hits > prev[0]) == (n > 0)
+        prev = (idx.hits, idx.hit_tokens)
+    assert idx.lookups == lookups
+    assert idx.hits <= idx.lookups
+    assert idx.hit_tokens >= idx.hits

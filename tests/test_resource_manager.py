@@ -1,7 +1,11 @@
 """Sort-initialized simulated annealing (Algorithm 2)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.placement import InterferenceModel, presorted_dp
 from repro.core.resource_manager import (WorkerLatencyModel, _perturb,

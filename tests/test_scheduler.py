@@ -1,6 +1,9 @@
 """Progressive priority scheduling (Algorithm 1) and baseline disciplines."""
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.scheduler import make_scheduler
 from repro.core.trajectory import Trajectory

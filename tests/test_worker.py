@@ -90,9 +90,10 @@ def test_preemption_persists_cache(setup):
                       sampler=SamplerConfig(temperature=0.0))
     w.prefill(1, [5, 7, 9, 11])
     first = w.decode([1], 2)[1]
-    w.preempt(1)                                  # evict from batch, persist KV
-    assert 1 in w.store and w.store[1].cache is not None
+    w.preempt(1)                                  # mask flip: lane stays resident
+    assert 1 in w.store and w.store[1].preempted
     resumed = w.decode([1], 2)[1]                 # continues from persisted state
+    assert not w.store[1].preempted               # decode implicitly resumes
     assert len(first) == 2 and len(resumed) == 2
 
 
