@@ -1,0 +1,170 @@
+"""Chunked prefill plane benchmark: admission, compile counts, tool absorption.
+
+Four headline numbers on the real JAX engine (reduced model, CPU-friendly):
+
+  * jit compile count across distinct prompt lengths — the legacy full-sequence
+    ``_admit`` compiles once per (1, S) shape (O(n) in distinct lengths); the
+    chunked plane reuses ONE fixed-shape (1, C) kernel (O(1)),
+  * admission latency at a previously-unseen prompt length — where the legacy
+    path pays a fresh XLA compile and the chunked path pays ceil(S/C) dispatches,
+  * tool-absorption throughput — chunked suffix prefill into one lane vs the old
+    per-token masked full-pool ``extend`` (O(L) whole-pool dispatches),
+  * prefix-hit admission speedup on a GRPO-group workload — siblings implant the
+    shared prompt from the radix cache and prefill only the suffix.
+
+Emits ``name,us_per_call,derived`` CSV rows and writes ``BENCH_prefill.json``.
+``--smoke`` (CI) runs a reduced sweep and *asserts* the compile-count bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config
+from repro.engine import worker as W
+from repro.engine.sampler import SamplerConfig
+from repro.models import model as M
+
+
+def _block(w):
+    jax.block_until_ready(w.pool["pos"])
+
+
+def _admit_once(w, sid, prompt):
+    t0 = time.perf_counter()
+    w.prefill(sid, prompt)
+    _block(w)
+    return time.perf_counter() - t0
+
+
+def run(fast: bool = True, smoke: bool = False,
+        json_path: str = "BENCH_prefill.json") -> dict:
+    n_lengths, tool_len, group = (6, 32, 4) if (fast or smoke) else (12, 96, 8)
+    chunk = 16
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    greedy = SamplerConfig(temperature=0.0)
+    rng = np.random.default_rng(0)
+    # distinct lengths straddling chunk boundaries
+    lengths = sorted({chunk * (i // 2) + (3 if i % 2 else chunk - 1) + 2
+                      for i in range(n_lengths)})
+    prompts = [[5 + int(t) for t in rng.integers(0, 100, s)] for s in lengths]
+
+    def make(use_chunked, reuse, slots):
+        return W.RolloutWorker(cfg, params, capacity=256, max_slots=slots,
+                               sampler=greedy, chunk_size=chunk,
+                               use_chunked=use_chunked, prefix_reuse=reuse)
+
+    # ---- compile count + new-length admission latency ------------------------
+    results: dict = {"chunk_size": chunk, "prompt_lengths": lengths}
+    legacy = make(False, False, len(prompts) + 1)
+    chunked = make(True, False, len(prompts) + 1)
+    c0_legacy = W._admit._cache_size()
+    c0_chunk = W._prefill_chunk._cache_size()
+    t_legacy = [_admit_once(legacy, i, p) for i, p in enumerate(prompts)]
+    t_chunk = [_admit_once(chunked, i, p) for i, p in enumerate(prompts)]
+    legacy_compiles = W._admit._cache_size() - c0_legacy
+    chunk_compiles = W._prefill_chunk._cache_size() - c0_chunk
+    results["compiles"] = {
+        "distinct_lengths": len(prompts),
+        "legacy_admit_compiles": legacy_compiles,
+        "chunked_prefill_compiles": chunk_compiles,
+    }
+    # skip each path's first admission (shared warmup of _implant etc.)
+    results["admission_new_length"] = {
+        "legacy_mean_s": float(np.mean(t_legacy[1:])),
+        "chunked_mean_s": float(np.mean(t_chunk[1:])),
+        "speedup": float(np.mean(t_legacy[1:]) / np.mean(t_chunk[1:])),
+    }
+
+    # ---- tool absorption: chunked extend vs per-token extend -----------------
+    wa = make(True, False, 2)
+    wa.prefill(0, prompts[0])
+    tool = [7 + int(t) for t in rng.integers(0, 100, tool_len)]
+    wa.extend(0, tool)                                   # compile warmup
+    _block(wa)
+    _, dt_chunked = timed(lambda: (wa.extend(0, tool), _block(wa)), repeat=3)
+    wb = make(True, False, 2)
+    wb.prefill(0, prompts[0])
+    wb.extend_per_token(0, tool)                         # compile warmup
+    _block(wb)
+    _, dt_legacy = timed(lambda: (wb.extend_per_token(0, tool), _block(wb)),
+                         repeat=3)
+    results["tool_absorption"] = {
+        "tokens": tool_len,
+        "chunked_tok_s": tool_len / dt_chunked,
+        "per_token_tok_s": tool_len / dt_legacy,
+        "speedup": dt_legacy / dt_chunked,
+    }
+
+    # ---- GRPO group: prefix-hit admission ------------------------------------
+    wg = make(True, True, group + 1)
+    prompt = [5 + int(t) for t in rng.integers(0, 100, 3 * chunk)]
+    cold = _admit_once(wg, 100, prompt)
+    warm = [_admit_once(wg, 101 + i, prompt) for i in range(group - 1)]
+    results["grpo_group"] = {
+        "group_size": group,
+        "prompt_tokens": len(prompt),
+        "cold_admit_s": cold,
+        "warm_admit_mean_s": float(np.mean(warm)),
+        "speedup": cold / float(np.mean(warm)),
+        "reused_tokens": wg.reused_tokens,
+    }
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+    emit([
+        ("prefill_compiles_legacy", 0.0,
+         f"{legacy_compiles} compiles / {len(prompts)} lengths"),
+        ("prefill_compiles_chunked", 0.0,
+         f"{chunk_compiles} compiles / {len(prompts)} lengths"),
+        ("prefill_admit_new_length_legacy",
+         results["admission_new_length"]["legacy_mean_s"] * 1e6, "s/admit"),
+        ("prefill_admit_new_length_chunked",
+         results["admission_new_length"]["chunked_mean_s"] * 1e6,
+         f"{results['admission_new_length']['speedup']:.2f}x"),
+        ("prefill_tool_absorb_chunked", dt_chunked * 1e6,
+         f"{results['tool_absorption']['chunked_tok_s']:.1f} tok/s"),
+        ("prefill_tool_absorb_per_token", dt_legacy * 1e6,
+         f"{results['tool_absorption']['per_token_tok_s']:.1f} tok/s"),
+        ("prefill_tool_absorb_speedup", 0.0,
+         f"{results['tool_absorption']['speedup']:.2f}x"),
+        ("prefill_grpo_admit_speedup", 0.0,
+         f"{results['grpo_group']['speedup']:.2f}x "
+         f"({wg.reused_tokens} tokens implanted)"),
+    ])
+
+    if smoke:
+        # the enforced invariant: chunked admission compiles are bounded by the
+        # chunk/bucket count, NOT by the number of distinct prompt lengths
+        assert chunk_compiles <= 2, \
+            f"chunked prefill compiled {chunk_compiles}x for {len(prompts)} lengths"
+        assert legacy_compiles >= len(prompts), \
+            "legacy baseline unexpectedly stopped compiling per length"
+        assert results["grpo_group"]["reused_tokens"] >= \
+            (group - 1) * len(prompt), "GRPO siblings did not implant the prompt"
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + assert the O(1) compile bound (CI)")
+    ap.add_argument("--json", default="BENCH_prefill.json")
+    args = ap.parse_args(argv)
+    emit([], header=True)
+    run(fast=not args.full, smoke=args.smoke, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,9 +64,12 @@ def run(fast: bool = True) -> None:
     leg_dt, leg_tok, leg_admit = _bench_engine(
         lambda: LegacyRolloutWorker(cfg, params, capacity=256, sampler=greedy),
         n_seqs, gen_tokens)
+    # prefix_reuse off: every admission here repeats one prompt, and radix implants
+    # would measure the reuse path instead of raw admission (bench_prefill covers
+    # reuse separately)
     sp_dt, sp_tok, sp_admit = _bench_engine(
         lambda: RolloutWorker(cfg, params, capacity=256, max_slots=n_seqs + 1,
-                              sampler=greedy),
+                              sampler=greedy, prefix_reuse=False),
         n_seqs, gen_tokens)
 
     emit([

@@ -14,8 +14,8 @@ import sys
 import time
 
 from benchmarks import (bench_beyond, bench_overall, bench_overhead, bench_placement,
-                        bench_predictor, bench_resources, bench_scheduler,
-                        bench_worker)
+                        bench_predictor, bench_prefill, bench_resources,
+                        bench_scheduler, bench_worker)
 
 SUITES = {
     "fig12_overall": bench_overall,
@@ -26,6 +26,7 @@ SUITES = {
     "tab12_overhead": bench_overhead,
     "beyond_ctx": bench_beyond,
     "engine_worker": bench_worker,
+    "engine_prefill": bench_prefill,
 }
 
 

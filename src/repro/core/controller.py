@@ -118,6 +118,33 @@ class HeddleController:
         self.degrees: list[int] = []
         self.groups: list[list[int]] = []
         self._traj_index: dict[int, Trajectory] = {}
+        self.worker_stats: dict[int, dict] = {}   # wid -> engine dispatch_stats()
+
+    # ------------------------------------------------------------ telemetry (measured)
+    def record_worker_stats(self, worker_id: int, stats: dict) -> None:
+        """Ingest a data-plane worker's ``dispatch_stats()`` snapshot.
+
+        The engine reports *measured* prefix reuse (tokens implanted from the radix
+        cache vs tokens actually prefilled), which replaces the control plane's
+        assumed hit rates in placement and simulation."""
+        self.worker_stats[worker_id] = dict(stats)
+
+    @property
+    def measured_reuse_rate(self) -> Optional[float]:
+        """Fraction of admission tokens served from cached prefixes, cluster-wide.
+
+        Admission tokens only — tool absorption (``absorbed_tokens``) is excluded,
+        it has its own cache-hit path.  Cold first-of-group admissions ARE in the
+        denominator, so this is a conservative lower bound on the per-sibling
+        implant fraction the simulator's cache model applies.  ``None`` until any
+        worker has reported — callers fall back to the paper's assumed full-prompt
+        reuse in that case."""
+        reused = sum(s.get("reused_tokens", 0) for s in self.worker_stats.values())
+        total = reused + sum(s.get("prefilled_tokens", 0)
+                             for s in self.worker_stats.values())
+        if total == 0:
+            return None
+        return reused / total
 
     # ------------------------------------------------------------ provisioning (how)
     def provision(self, trajectories: Sequence[Trajectory]) -> list[int]:

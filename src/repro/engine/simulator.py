@@ -69,6 +69,11 @@ class SimConfig:
     # Prefill is compute-bound while bs=1 decode is weight-read-bound, so one prefill
     # token costs ~1/100 of a decode token (14B bf16: ~0.1ms vs ~14ms on Hopper-class).
     prefill_speedup: float = 100.0
+    # Measured radix-cache reuse (engine dispatch_stats -> controller
+    # measured_reuse_rate): the fraction of a shared prompt a sibling arrival
+    # actually implants instead of re-prefilling.  None keeps the paper's
+    # assumption of full prompt reuse at a prompt-home worker (rate = 1.0).
+    measured_reuse_rate: float | None = None
     link_bandwidth: float = 50e9         # migration link (GPU-Direct RDMA / ICI)
     model_layers: int = 40               # KV bytes model (Qwen3-14B-ish)
     model_kv_heads: int = 8
@@ -251,7 +256,13 @@ class RolloutSimulator:
                 prefill_tokens = (traj.steps[-1].tool_output_tokens if traj.steps
                                   else traj.prompt_tokens)
             elif traj.worker_id in prompt_home.get(traj.prompt_id, set()):
-                prefill_tokens = max(traj.context_tokens - traj.prompt_tokens,
+                # group-sibling arrival: the shared prompt is reusable.  Scale by
+                # the engine's measured radix-cache reuse rate when available
+                # instead of assuming the whole prompt implants.
+                rate = self.cfg.measured_reuse_rate
+                reusable = traj.prompt_tokens if rate is None \
+                    else rate * traj.prompt_tokens
+                prefill_tokens = max(traj.context_tokens - reusable,
                                      traj.prompt_tokens // 8)
                 self.stats_miss_tokens += int(prefill_tokens)
             else:

@@ -11,8 +11,15 @@ The engine owns one preallocated **slot-pool KV cache** — ``max_slots`` lanes 
   * preemption: a mask flip — the lane stays resident, nothing moves,
   * migration: ``model.gather_slots`` lifts one lane out; the destination implants it
     into a free lane without disturbing co-resident sequences (§5.3),
-  * tool absorption: masked teacher-forcing into a single lane (no prefix recompute),
-  * prefix-cache hit accounting via a token-trie.
+  * tool absorption: chunked prefill into the lane at its current offset
+    (ceil(L/C) fixed-shape dispatches, no prefix recompute),
+  * prefix reuse: a radix cache owning resident + retired lane KV — matched
+    prefixes are implanted by an on-device lane-slice copy and only the unmatched
+    suffix is prefilled (O(suffix) admission for GRPO siblings / tool re-entries).
+
+Admission itself is chunked: ceil(S/C) reuses of ONE compiled (1, C) kernel replace
+the legacy one-compile-per-prompt-length full forward (kept in ``_admit`` for
+configs chunking can't serve — see ``model.supports_chunked_prefill``).
 
 Sampling is per-slot: every sequence draws from
 ``fold_in(fold_in(PRNGKey(seed + worker_id), seq_id), context_len)``, making its token
@@ -23,6 +30,7 @@ concat/slice engine as the parity reference; see docs/engine.md for invariants.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 
@@ -36,35 +44,147 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 
 
-# ---------------------------------------------------------------- prefix trie
+# ---------------------------------------------------------------- radix cache
 
-class PrefixCacheIndex:
-    """Token-trie for prefix-hit accounting (radix-cache bookkeeping)."""
+class _TrieNode:
+    __slots__ = ("children", "refs", "last_used")
 
     def __init__(self):
-        self.root: dict = {}
-        self.hits = 0
-        self.hit_tokens = 0
+        self.children: dict[int, _TrieNode] = {}
+        self.refs: dict[int, int] = {}       # lane slot -> epoch at insert
+        self.last_used = 0
+
+
+class PrefixCacheIndex:
+    """Radix cache over token prefixes: accounting trie + (lane, span) KV refs.
+
+    Accounting: every ``match_len``/``match_lane`` counts a lookup and classifies it
+    as a **full** hit (the whole query matched) or a **partial** hit (a nonzero
+    proper prefix matched) — ``hits`` aggregates both, so controller affinity stats
+    can consume the honest split.  Node count is bounded by ``max_nodes``: inserts
+    past the cap first prune the least-recently-used subtrees (a parent is always at
+    least as recent as its children, so pruning by timestamp cutoff removes whole
+    cold subtrees) and then truncate, keeping memory bounded even in pure
+    accounting mode.
+
+    KV ownership: ``insert(tokens, slot=...)`` tags every node on the path with a
+    ``(slot, epoch)`` ref, claiming that lane ``slot`` holds valid KV for this
+    prefix at positions ``[0, depth)``.  ``invalidate(slot)`` bumps the slot's epoch
+    (lane overwritten / evicted); stale refs are dropped lazily during matching.
+    ``match_lane`` returns the deepest live ref, which the engine implants with an
+    on-device lane-slice copy so only the unmatched suffix is prefilled.
+    """
+
+    def __init__(self, max_nodes: int = 65_536):
+        self.root = _TrieNode()
+        self.max_nodes = max_nodes
+        self.node_count = 0                  # root excluded
+        self._clock = 0
+        self._epochs: dict[int, int] = {}
         self.lookups = 0
+        self.full_hits = 0
+        self.partial_hits = 0
+        self.hit_tokens = 0
 
-    def insert(self, tokens: list[int]) -> None:
+    @property
+    def hits(self) -> int:
+        return self.full_hits + self.partial_hits
+
+    def invalidate(self, slot: int) -> None:
+        """Mark lane ``slot``'s KV refs stale (lane reassigned or evicted)."""
+        self._epochs[slot] = self._epochs.get(slot, 0) + 1
+
+    # ------------------------------------------------------------ insert / match
+    def insert(self, tokens: list[int], slot: int | None = None) -> None:
+        self._clock += 1
+        now = self._clock
+        epoch = self._epochs.setdefault(slot, 0) if slot is not None else 0
         node = self.root
+        node.last_used = now
         for t in tokens:
-            node = node.setdefault(int(t), {})
+            child = node.children.get(int(t))
+            if child is None:
+                if self.node_count >= self.max_nodes:
+                    self._prune()
+                if self.node_count >= self.max_nodes:
+                    return                   # cap still binding: truncate the insert
+                child = _TrieNode()
+                node.children[int(t)] = child
+                self.node_count += 1
+            child.last_used = now
+            if slot is not None:
+                child.refs[slot] = epoch
+            node = child
 
-    def match_len(self, tokens: list[int]) -> int:
-        self.lookups += 1
+    def _walk(self, tokens: list[int]) -> tuple[int, int, int | None]:
+        """Walk + account one lookup; returns (trie depth, reuse depth, lane)."""
+        self._clock += 1
+        now = self._clock
         node = self.root
         n = 0
+        reuse_n, reuse_slot = 0, None
         for t in tokens:
-            node = node.get(int(t))
+            node = node.children.get(int(t))
             if node is None:
                 break
+            node.last_used = now
             n += 1
-        if n:
-            self.hits += 1
-            self.hit_tokens += n
-        return n
+            if node.refs:
+                stale = [s for s, e in node.refs.items()
+                         if self._epochs.get(s, 0) != e]
+                for s in stale:
+                    del node.refs[s]
+                if node.refs:
+                    reuse_n, reuse_slot = n, next(iter(node.refs))
+        self.lookups += 1
+        if n and n == len(tokens):
+            self.full_hits += 1
+        elif n:
+            self.partial_hits += 1
+        self.hit_tokens += n
+        return n, reuse_n, reuse_slot
+
+    def match_len(self, tokens: list[int]) -> int:
+        return self._walk(tokens)[0]
+
+    def match_lane(self, tokens: list[int]) -> tuple[int, int | None]:
+        """Deepest prefix of ``tokens`` backed by a live lane: (length, slot)."""
+        _, reuse_n, reuse_slot = self._walk(tokens)
+        return reuse_n, reuse_slot
+
+    # ------------------------------------------------------------ LRU pruning
+    def _subtree_size(self, node: _TrieNode) -> int:
+        count, stack = 0, [node]
+        while stack:
+            n = stack.pop()
+            count += 1
+            stack.extend(n.children.values())
+        return count
+
+    def _prune(self) -> None:
+        """Evict least-recently-used subtrees down to ~3/4 of the node cap."""
+        target = max(1, self.max_nodes * 3 // 4)
+        stamps: list[int] = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for c in node.children.values():
+                stamps.append(c.last_used)
+                stack.append(c)
+        excess = len(stamps) - target
+        if excess <= 0:
+            return
+        # never evict the in-flight insert path (stamped with the current clock)
+        cutoff = min(sorted(stamps)[excess - 1], self._clock - 1)
+        removed = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            doomed = [t for t, c in node.children.items() if c.last_used <= cutoff]
+            for t in doomed:
+                removed += self._subtree_size(node.children.pop(t))
+            stack.extend(node.children.values())
+        self.node_count -= removed
 
 
 # ---------------------------------------------------------------- jitted kernels
@@ -72,9 +192,40 @@ class PrefixCacheIndex:
 
 @partial(jax.jit, static_argnames=("cfg", "capacity"), donate_argnums=(2,))
 def _admit(cfg: ModelConfig, params, pool, tokens, slot, capacity: int):
-    """Prefill ``tokens`` (1, S) and write the resulting cache into lane ``slot``."""
+    """Full-sequence prefill fallback: one compile per distinct prompt length.
+
+    Used only for configs ``supports_chunked_prefill`` rejects (MoE, sliding-window,
+    cross-attention); everything else admits through the chunked path below."""
     _, _, lane = M.forward_full(cfg, params, {"tokens": tokens}, capacity=capacity)
     return M.write_slot(pool, lane, slot)
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch", "capacity"))
+def _fresh_lane(cfg: ModelConfig, batch: int, capacity: int):
+    """Empty batch-1 lane cache (chunked admission starts here)."""
+    return M.init_cache(cfg, None, batch, capacity)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _prefill_chunk(cfg: ModelConfig, params, lane, tokens, length):
+    """One fixed-shape (1, C) chunk into a batch-1 lane at its current ``pos``.
+
+    ``length`` is traced, so ONE compile serves every offset and tail length —
+    admission cost is bounded by chunk count, not by distinct prompt lengths."""
+    return M.prefill_chunk(cfg, params, lane, tokens, length)
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _copy_prefix(pool, src_slot, lane, n):
+    """Implant the first ``n`` positions of pool lane ``src_slot`` into ``lane``
+    (radix-cache prefix reuse: an on-device lane-slice copy, no recompute)."""
+    return M.copy_prefix(pool, src_slot, lane, n)
+
+
+@jax.jit
+def _gather_lane(pool, slot):
+    """Lift one lane out of the pool as a batch-1 cache (chunked tool absorption)."""
+    return M.gather_slots(pool, slot[None])
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -144,11 +295,24 @@ class Sequence:
 
 
 class RolloutWorker:
-    """One rollout worker holding model params and a slot-pool KV cache."""
+    """One rollout worker holding model params and a slot-pool KV cache.
+
+    Admission runs the **chunked prefill plane** whenever the architecture supports
+    it (``model.supports_chunked_prefill``): a prompt of any length is ceil(S/C)
+    dispatches of one fixed-shape compiled chunk kernel, with the radix cache
+    implanting any matched prefix from a resident or retired lane first, so GRPO
+    siblings and multi-turn re-entries pay O(suffix).  Released lanes retire into an
+    LRU set (bounded by ``retired_kv_bytes``) instead of being dropped, keeping
+    their KV reusable until admission pressure reclaims them.
+    """
 
     def __init__(self, cfg: ModelConfig, params, capacity: int = 256,
                  max_slots: int = 8, worker_id: int = 0,
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 chunk_size: int = 32, prefix_reuse: bool = True,
+                 use_chunked: bool | None = None,
+                 retired_kv_bytes: int | None = None,
+                 prefix_index_nodes: int = 65_536):
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
@@ -158,44 +322,133 @@ class RolloutWorker:
         self.base_key = jax.random.PRNGKey(seed + worker_id)
         self.pool = M.init_cache(cfg, params, max_slots, capacity)
         self.store: dict[int, Sequence] = {}       # resident sequences (incl. preempted)
-        self.prefix_index = PrefixCacheIndex()
+        self.chunk_size = chunk_size
+        self._chunked = ((use_chunked if use_chunked is not None else True)
+                         and M.supports_chunked_prefill(cfg))
+        self._reuse = prefix_reuse and self._chunked and M.supports_prefix_reuse(cfg)
+        # stable per-lane cache footprint (shape math only — nothing is allocated),
+        # independent of later pool growth
+        lane = jax.eval_shape(lambda: M.init_cache(cfg, None, 1, capacity))
+        self._lane_bytes = sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                               for x in jax.tree.leaves(lane))
+        budget = (retired_kv_bytes if retired_kv_bytes is not None
+                  else self._lane_bytes * max_slots)
+        self._max_retired = budget // self._lane_bytes if self._lane_bytes else 0
+        self.retired: OrderedDict[int, int] = OrderedDict()   # slot -> token count
+        self.prefix_index = PrefixCacheIndex(max_nodes=prefix_index_nodes)
         self.decode_steps = 0
         self.pool_grows = 0
+        self.reused_tokens = 0                     # admission tokens implanted, not computed
+        self.prefilled_tokens = 0                  # admission tokens actually computed
+        self.absorbed_tokens = 0                   # tool tokens teacher-forced (extend)
+        self.prefill_dispatches = 0                # chunk kernel launches
 
     # ------------------------------------------------------------ slot bookkeeping
     def _alloc_slot(self) -> int:
-        """Lowest free lane; grows the pool (doubling) when every lane is resident.
+        """Lowest free lane, else the LRU retired lane, else pool growth (doubling).
 
-        Free lanes are derived from the store, so ``store.clear()`` (weight-sync reset
-        in the RL loop) releases every lane with no extra bookkeeping."""
+        The returned lane is about to be overwritten, so its radix refs are
+        invalidated here — one rule covers release, eviction, and external resets."""
         used = {s.slot for s in self.store.values()}
         for slot in range(self.max_slots):
-            if slot not in used:
+            if slot not in used and slot not in self.retired:
+                self.prefix_index.invalidate(slot)
                 return slot
+        if self.retired:
+            slot, _ = self.retired.popitem(last=False)
+            self.prefix_index.invalidate(slot)
+            return slot
         slot = self.max_slots
         fresh = M.init_cache(self.cfg, self.params, self.max_slots, self.capacity)
         self.pool = M.concat_pools(self.pool, fresh)
         self.max_slots *= 2
         self.pool_grows += 1
+        self.prefix_index.invalidate(slot)
         return slot
+
+    def _retire_slot(self, slot: int, n_tokens: int) -> None:
+        """Hand a released lane to the radix cache (LRU, byte-budgeted)."""
+        if not (self._reuse and self._max_retired > 0 and n_tokens > 0):
+            self.prefix_index.invalidate(slot)
+            return
+        self.retired[slot] = n_tokens
+        self.retired.move_to_end(slot)
+        while len(self.retired) > self._max_retired:
+            old, _ = self.retired.popitem(last=False)
+            self.prefix_index.invalidate(old)
 
     # ------------------------------------------------------------ lifecycle
     def prefill(self, seq_id: int, tokens: list[int]) -> None:
-        """Admit a sequence: full-sequence forward writes straight into a free lane."""
-        self.prefix_index.match_len(tokens)
+        """Admit a sequence: implant any radix-matched prefix from a resident or
+        retired lane (O(1) on-device slice copy), then chunk-prefill the suffix."""
+        S = len(tokens)
+        reuse_n, src = 0, None
+        if self._reuse:
+            reuse_n, src = self.prefix_index.match_lane(tokens)
+        else:
+            self.prefix_index.match_len(tokens)
         slot = self._alloc_slot()
-        arr = jnp.asarray(tokens, jnp.int32)[None]
-        self.pool = _admit(self.cfg, self.params, self.pool, arr, slot, self.capacity)
+        if not self._chunked:
+            arr = jnp.asarray(tokens, jnp.int32)[None]
+            self.pool = _admit(self.cfg, self.params, self.pool, arr, slot,
+                               self.capacity)
+            self.prefilled_tokens += S
+        else:
+            lane = _fresh_lane(self.cfg, 1, self.capacity)
+            if src is not None and reuse_n > 0:
+                if src in self.retired:
+                    self.retired.move_to_end(src)         # LRU touch
+                lane = _copy_prefix(self.pool, jnp.asarray(src, jnp.int32), lane,
+                                    jnp.asarray(reuse_n, jnp.int32))
+                self.reused_tokens += reuse_n
+            lane = self._chunk_into(lane, tokens, reuse_n)
+            self.pool = _implant(self.pool, lane, slot)
+            self.prefilled_tokens += S - reuse_n
         key = np.asarray(jax.random.fold_in(self.base_key, seq_id))
         self.store[seq_id] = Sequence(seq_id, list(tokens), slot, key)
-        self.prefix_index.insert(tokens)
+        self.prefix_index.insert(tokens, slot=slot)
+
+    def _chunk_into(self, lane, tokens: list[int], start: int):
+        """Feed ``tokens[start:]`` through the fixed-shape chunk kernel."""
+        C = self.chunk_size
+        off, S = start, len(tokens)
+        while off < S:
+            step = min(C, S - off)
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :step] = tokens[off:off + step]
+            lane = _prefill_chunk(self.cfg, self.params, lane, jnp.asarray(buf),
+                                  jnp.asarray(step, jnp.int32))
+            off += step
+            self.prefill_dispatches += 1
+        return lane
 
     def extend(self, seq_id: int, tool_tokens: list[int]) -> None:
-        """Absorb tool output into a resident lane (no prefix recompute)."""
+        """Absorb tool output: chunked prefill into the lane at its current offset
+        (ceil(L/C) lane-sized dispatches instead of L full-pool decode steps)."""
+        seq = self.store[seq_id]
+        if self._chunked:
+            lane = _gather_lane(self.pool, jnp.asarray(seq.slot, jnp.int32))
+            ext = list(seq.tokens) + [int(t) for t in tool_tokens]
+            lane = self._chunk_into(lane, ext, len(seq.tokens))
+            self.pool = _implant(self.pool, lane, seq.slot)
+            self.absorbed_tokens += len(tool_tokens)
+            seq.tokens = ext
+        else:
+            self.extend_per_token(seq_id, tool_tokens)
+            return
+        self.prefix_index.insert(seq.tokens, slot=seq.slot)
+
+    def extend_per_token(self, seq_id: int, tool_tokens: list[int]) -> None:
+        """Legacy tool absorption: one masked full-pool decode step per token.
+
+        Kept as the fallback for non-chunkable configs and as the baseline
+        ``benchmarks/bench_prefill.py`` measures the chunked path against."""
         seq = self.store[seq_id]
         arr = jnp.asarray(tool_tokens, jnp.int32)
         self.pool = _extend_slot(self.cfg, self.params, self.pool, arr, seq.slot)
+        self.absorbed_tokens += len(tool_tokens)
         seq.tokens.extend(int(t) for t in tool_tokens)
+        self.prefix_index.insert(seq.tokens, slot=seq.slot)
 
     def decode(self, seq_ids: list[int], n_tokens: int, stop_token: int | None = None
                ) -> dict[int, list[int]]:
@@ -232,7 +485,8 @@ class RolloutWorker:
             self.decode_steps += step
             if remaining > 0 and not bool(np.asarray(live).any()):
                 break
-        emitted = np.concatenate(parts, axis=0)
+        emitted = (np.concatenate(parts, axis=0) if parts
+                   else np.zeros((0, B), np.int32))    # n_tokens == 0 edge
         out: dict[int, list[int]] = {}
         for sid in seq_ids:
             seq = self.store[sid]
@@ -242,7 +496,7 @@ class RolloutWorker:
             seq.generated += len(toks)
             if stop_token is not None and toks and toks[-1] == stop_token:
                 seq.finished = True
-            self.prefix_index.insert(seq.tokens)
+            self.prefix_index.insert(seq.tokens, slot=seq.slot)
         return out
 
     # ------------------------------------------------------------ control ops
@@ -254,15 +508,22 @@ class RolloutWorker:
         self.store[seq_id].preempted = True
 
     def release(self, seq_id: int) -> None:
-        """Finish a sequence and free its lane (next admission overwrites it)."""
-        self.store.pop(seq_id, None)
+        """Finish a sequence; its lane retires into the radix cache's LRU set
+        (prefix stays implantable) until admission pressure or the byte budget
+        reclaims it."""
+        seq = self.store.pop(seq_id, None)
+        if seq is not None:
+            self._retire_slot(seq.slot, len(seq.tokens))
 
     def migrate_out(self, seq_id: int) -> dict:
         """Package one lane's context + cache for transfer (§5.3 KV migration).
 
-        Gathers a single lane — co-resident sequences are untouched."""
+        Gathers a single lane — co-resident sequences are untouched.  The local
+        copy retires into the radix cache, so group siblings arriving later still
+        find the shared prefix here."""
         seq = self.store.pop(seq_id)
         lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
+        self._retire_slot(seq.slot, len(seq.tokens))
         return {
             "seq_id": seq.seq_id,
             "tokens": list(seq.tokens),
@@ -290,11 +551,45 @@ class RolloutWorker:
         seq = Sequence(package["seq_id"], list(package["tokens"]), slot,
                        np.asarray(key), generated=package["generated"])
         self.store[package["seq_id"]] = seq
-        self.prefix_index.insert(seq.tokens)
+        self.prefix_index.insert(seq.tokens, slot=slot)
 
+    # ------------------------------------------------------------ accounting
     def kv_bytes(self, seq_id: int) -> int:
-        """Per-lane cache footprint (one slot's share of the pool)."""
+        """Per-lane cache footprint.
+
+        Computed once at construction from the lane *shapes* (``jax.eval_shape``),
+        so the reported figure is stable across pool growth — dividing the live
+        pool by the current ``max_slots`` tied the answer to growth timing."""
         assert seq_id in self.store
-        B = self.max_slots
-        return sum((x.size // B) * x.dtype.itemsize
-                   for x in jax.tree.leaves(self.pool))
+        return self._lane_bytes
+
+    def reset_cache(self) -> None:
+        """Drop every resident and retired lane and all radix refs.
+
+        Required on weight sync (RL loop): retired KV computed under old weights
+        must never be implanted into post-update admissions."""
+        self.store.clear()
+        self.retired.clear()
+        self.prefix_index = PrefixCacheIndex(
+            max_nodes=self.prefix_index.max_nodes)
+
+    def dispatch_stats(self) -> dict:
+        """Measured admission/reuse counters for the control plane (§3 telemetry).
+
+        The controller aggregates these into ``measured_reuse_rate`` so placement
+        and the simulator's cache model consume observed hit rates, not assumed
+        ones."""
+        idx = self.prefix_index
+        return {
+            "reused_tokens": self.reused_tokens,
+            "prefilled_tokens": self.prefilled_tokens,
+            "absorbed_tokens": self.absorbed_tokens,
+            "prefill_dispatches": self.prefill_dispatches,
+            "full_hits": idx.full_hits,
+            "partial_hits": idx.partial_hits,
+            "lookups": idx.lookups,
+            "hit_tokens": idx.hit_tokens,
+            "retired_lanes": len(self.retired),
+            "decode_steps": self.decode_steps,
+            "pool_grows": self.pool_grows,
+        }

@@ -26,9 +26,13 @@ def _use_pallas() -> bool:
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     valid_len: jax.Array) -> jax.Array:
-    """Flash-decode GQA attention: q (B,KV,G,hd) vs cache (B,C,KV,hd)."""
-    if _use_pallas():
+                     valid_len: jax.Array, *, force_pallas: bool = False) -> jax.Array:
+    """Flash-decode GQA attention: q (B,KV,G,hd) vs cache (B,C,KV,hd).
+
+    ``force_pallas`` routes through the Pallas kernel regardless of backend
+    (interpret mode off-TPU) — the ``ModelConfig.use_pallas_decode`` wire.
+    """
+    if force_pallas or _use_pallas():
         interpret = jax.default_backend() != "tpu"
         return decode_attention_pallas(q, k, v, valid_len, interpret=interpret)
     return ref.decode_attention_ref(q, k, v, valid_len)

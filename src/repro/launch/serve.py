@@ -21,6 +21,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--group-size", type=int, default=4,
+                    help="GRPO group size: requests per shared prompt (prefix-"
+                         "affine placement keeps a group on one worker so the "
+                         "radix cache implants the shared prompt for siblings)")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--gen-tokens", type=int, default=24)
     ap.add_argument("--scheduler", default="pps", choices=["pps", "fcfs", "rr", "sjf"])
@@ -48,21 +52,29 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = {i: [5 + int(t) for t in rng.integers(0, 100, rng.integers(3, 9))]
-               for i in range(args.requests)}
+    # GRPO-style workload: requests in groups of --group-size share one prompt
+    gsz = max(1, args.group_size)
+    n_groups = -(-args.requests // gsz)
+    group_prompts = [[5 + int(t) for t in rng.integers(0, 100, rng.integers(3, 9))]
+                     for _ in range(n_groups)]
+    prompts = {i: group_prompts[i // gsz] for i in range(args.requests)}
 
-    # trajectory-aware placement of the request batch (predicted length ~ prompt len)
-    lengths = [float(len(p)) * 8 for p in prompts.values()]
+    # trajectory-aware placement of the request *groups* (prefix affinity: the whole
+    # group lands on one worker, so siblings hit the radix cache); predicted group
+    # length ~ group_size * prompt length
+    lengths = [float(len(p)) * 8 * gsz for p in group_prompts]
     placement = place(lengths, args.workers, InterferenceModel.analytic(0.02))
     assignment = {}
     for w, group in enumerate(placement.groups):
-        for idx in group:
-            assignment[idx] = w
+        for gid in group:
+            for rid in range(gid * gsz, min((gid + 1) * gsz, args.requests)):
+                assignment[rid] = w
 
-    # size each worker's slot pool for its assigned group (pools auto-grow if the
+    # size each worker's slot pool for its assigned requests (pools auto-grow if the
     # scheduler later routes extra trajectories their way)
-    group_sizes = [max(2, len(g)) for g in placement.groups]
-    workers = [RolloutWorker(cfg, params, capacity=128, max_slots=group_sizes[i],
+    pool_sizes = [max(2, sum(1 for rid in assignment if assignment[rid] == i))
+                  for i in range(args.workers)]
+    workers = [RolloutWorker(cfg, params, capacity=128, max_slots=pool_sizes[i],
                              worker_id=i, sampler=SamplerConfig(temperature=0.8),
                              seed=args.seed)
                for i in range(args.workers)]
@@ -77,11 +89,28 @@ def main(argv=None):
     for w, rids in by_worker.items():
         out = workers[w].decode(rids, args.gen_tokens)
         done += sum(len(v) for v in out.values())
+        stats = workers[w].dispatch_stats()
         print(f"worker {w}: served {len(rids)} requests "
-              f"({sum(len(v) for v in out.values())} tokens)")
+              f"({sum(len(v) for v in out.values())} tokens), "
+              f"prefix reuse {stats['reused_tokens']}/"
+              f"{stats['reused_tokens'] + stats['prefilled_tokens']} admit tokens, "
+              f"{stats['full_hits']} full + {stats['partial_hits']} partial hits")
     dt = time.time() - t0
+
+    # surface measured reuse into the control plane's dispatch stats: this is the
+    # number the simulator's cache model consumes (SimConfig.measured_reuse_rate)
+    from repro.core.controller import HeddleController
+    from repro.core.predictor import ProgressivePredictor
+    from repro.core.resource_manager import WorkerLatencyModel
+    controller = HeddleController(ProgressivePredictor(),
+                                  InterferenceModel.analytic(0.02),
+                                  WorkerLatencyModel(), gpu_budget=args.workers)
+    for w in workers:
+        controller.record_worker_stats(w.worker_id, w.dispatch_stats())
+    rate = controller.measured_reuse_rate
     print(f"\nserved {args.requests} requests, {done} tokens in {dt:.1f}s "
-          f"({done/dt:.1f} tok/s on CPU)")
+          f"({done/dt:.1f} tok/s on CPU); measured prefix reuse rate "
+          f"{0.0 if rate is None else rate:.2f}")
     return 0
 
 

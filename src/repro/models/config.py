@@ -59,6 +59,10 @@ class ModelConfig:
 
     # --- attention variant ----------------------------------------------------
     sliding_window: int = 0              # 0 = full attention
+    # Route decode-phase attention through the Pallas flash-decode kernel
+    # (kernels/decode_attention.py).  Off-TPU the kernel runs in interpret mode —
+    # correct but slow, so the default stays on the jnp oracle except on TPU.
+    use_pallas_decode: bool = False
 
     norm_eps: float = 1e-5
     dtype: str = "bfloat16"

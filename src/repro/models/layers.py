@@ -187,8 +187,67 @@ def attention_decode(
     cache_v = shard(cache_v, ("batch", "kv_seq", "kv_heads", None))
     valid_len = jnp.minimum(pos + 1, C)
     out = kops.decode_attention(q.reshape(B, KV, H // KV, hd), cache_k, cache_v,
-                                valid_len)
+                                valid_len, force_pallas=cfg.use_pallas_decode)
     out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def attention_prefill_chunk(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    off: jax.Array,
+    length: jax.Array,
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape chunk prefill for one lane: process ``C`` tokens at offset ``off``.
+
+    x: (1, C, d) normed hidden states (rows >= ``length`` are padding); cache_k/v:
+    (1, cap, KV, hd) with positions ``[0, off)`` resident.  Writes the chunk's K/V into
+    the lane slice ``[off, off+C)`` (padding rows keep the old cache contents, so the
+    masked-decode self-healing invariant carries over), then attends each query ``i``
+    against cache slots ``t <= off + i`` — the resident prefix plus the chunk's own
+    causal keys, which were just written.  ``off``/``length`` are traced scalars, so one
+    compiled kernel serves every (offset, tail-length) — prefill at offset 0 and tool
+    absorption at offset > 0 are the same code path.  Non-windowed linear caches only
+    (ring writes would let later chunk rows overwrite slots earlier queries need).
+    Returns (out (1, C, d_model), new_cache_k, new_cache_v).
+    """
+    B, Cn, _ = x.shape
+    KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    positions = (off + jnp.arange(Cn))[None]                  # (1, C) absolute
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # write-then-attend: scatter valid rows to their ABSOLUTE slots.  A
+    # dynamic_update_slice would clamp its start when off + C > cap and smear the
+    # tail chunk over resident positions; per-row scatter keeps every key at
+    # off + j even when the fixed-shape window hangs past the capacity edge
+    # (out-of-capacity rows blend the old contents back — true overflow, which the
+    # decode path also cannot represent).
+    cap = cache_k.shape[1]
+    rows = off + jnp.arange(Cn)
+    valid = ((jnp.arange(Cn) < length) & (rows < cap))[None, :, None, None]
+    slots = jnp.clip(rows, 0, cap - 1)
+    cache_k = cache_k.at[:, slots].set(
+        jnp.where(valid, k.astype(cache_k.dtype), cache_k[:, slots]))
+    cache_v = cache_v.at[:, slots].set(
+        jnp.where(valid, v.astype(cache_v.dtype), cache_v[:, slots]))
+    mask = jnp.arange(cap)[None, :] <= (off + jnp.arange(Cn))[:, None]   # (C, cap)
+    qg = q.reshape(B, Cn, KV, G, hd)
+    out = _plain_attention(qg, cache_k, cache_v, mask[None, None, None],
+                           1.0 / math.sqrt(hd))
+    out = out.reshape(B, Cn, H, hd)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
 
 
@@ -200,7 +259,8 @@ def cross_attention_decode(p, x, cfg, cross_k, cross_v):
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     T = cross_k.shape[1]
     out = kops.decode_attention(q.reshape(B, KV, H // KV, hd), cross_k, cross_v,
-                                jnp.asarray(T, jnp.int32))
+                                jnp.asarray(T, jnp.int32),
+                                force_pallas=cfg.use_pallas_decode)
     out = out.reshape(B, 1, H, hd)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
 

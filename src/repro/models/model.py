@@ -535,6 +535,141 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, active=None):
     return logits[:, 0], {"pos": new_pos, "blocks": new_blocks}
 
 
+# ------------------------------------------------------------------ chunked prefill
+#
+# ``prefill_chunk`` processes a fixed-shape (1, C) token chunk at an arbitrary
+# position offset against an existing batch-1 lane cache: attention layers write the
+# chunk's K/V into the lane slice and attend to resident + own-causal keys
+# (layers.attention_prefill_chunk); recurrent layers run their exact one-token step
+# cells over the chunk inside a single fused scan, masking padding rows so the state
+# carry is position-exact.  A prompt of any length runs as ceil(S/C) reuses of ONE
+# compiled kernel (off/length are traced), and suffix prefill at offset > 0 — tool
+# absorption, prefix-reuse admission — is the same code path.  Logits are not
+# computed: the engine's decode loop re-feeds the last context token, exactly as it
+# does after a full prefill.
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill serves linear (non-ring) caches without cross-attention or MoE
+    (MoE capacity dispatch would let padding rows displace real tokens)."""
+    for kind in cfg.block_pattern:
+        mixer, _, mlp_kind = kind.partition("+")
+        if mixer not in ("attn", "mamba", "mlstm", "slstm"):
+            return False
+        if mlp_kind not in ("", "mlp"):
+            return False
+    return cfg.sliding_window == 0 and cfg.arch_type not in ("audio", "vlm")
+
+
+def supports_prefix_reuse(cfg: ModelConfig) -> bool:
+    """Prefix KV implanting needs position-sliceable caches: attention-only stacks
+    (recurrent mixers only retain their *final* state, not per-position snapshots)."""
+    return supports_chunked_prefill(cfg) and all(
+        k.partition("+")[0] == "attn" for k in cfg.block_pattern)
+
+
+def _recurrent_chunk(step_fn, p, h, cfg, state, length):
+    """Run a one-token recurrent step cell over a (1, C) chunk inside one scan.
+
+    Padding rows (index >= ``length``) keep the previous state (recurrent updates are
+    destructive, unlike the self-healing KV writes).  Returns (out (1, C, d), state')."""
+    Cn = h.shape[1]
+
+    def body(st, inp):
+        h_t, idx = inp                               # h_t: (1, d)
+        out, new = step_fn(p, h_t[:, None], cfg, st)
+        valid = idx < length
+        new = jax.tree.map(lambda n, o: jnp.where(valid, n, o.astype(n.dtype)),
+                           new, st)
+        return new, out[:, 0]
+
+    state, outs = lax.scan(body, state, (h.transpose(1, 0, 2), jnp.arange(Cn)))
+    return outs.transpose(1, 0, 2), state
+
+
+def _layer_chunk(cfg, kind, p, x, cache, off, length):
+    mixer, _, mlp_kind = kind.partition("+")
+    new_cache = cache
+    h = L.block_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        out, ck, cv = L.attention_prefill_chunk(p["mixer"], h, cfg, cache["k"],
+                                                cache["v"], off, length,
+                                                use_rope=_use_rope(cfg))
+        x = x + out
+        new_cache = dict(cache, k=ck, v=cv)
+    elif mixer == "mamba":
+        out, new_cache = _recurrent_chunk(L.mamba_step, p["mixer"], h, cfg, cache,
+                                          length)
+        x = x + out
+    elif mixer == "mlstm":
+        out, new_cache = _recurrent_chunk(L.mlstm_step, p["mixer"], h, cfg, cache,
+                                          length)
+        x = x + out
+    elif mixer == "slstm":
+        out, new_cache = _recurrent_chunk(L.slstm_step, p["mixer"], h, cfg, cache,
+                                          length)
+        x = x + out
+    else:
+        raise ValueError(f"prefill_chunk: unsupported mixer {mixer!r} "
+                         "(see supports_chunked_prefill)")
+    if mlp_kind == "mlp":
+        h = L.block_norm(cfg, p["norm2"], x)
+        x = x + L.mlp(p["mlp"], h, cfg.activation)
+    elif mlp_kind:
+        raise ValueError("prefill_chunk: MoE layers are not chunk-safe "
+                         "(padding rows would consume expert capacity)")
+    return x, new_cache
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache: dict, tokens: jax.Array,
+                  length) -> dict:
+    """Teacher-force a fixed-shape (1, C) chunk into a batch-1 lane cache.
+
+    ``tokens``: (1, C) int32, rows >= ``length`` are padding; ``length``: traced
+    scalar count of valid tokens.  The chunk lands at positions
+    ``pos .. pos + length`` where ``pos = cache["pos"][0]``.  Returns the updated
+    lane with ``pos`` advanced by ``length``.
+    """
+    assert tokens.shape[0] == 1, "prefill_chunk operates on one lane (batch 1)"
+    off = cache["pos"][0]
+    length = jnp.asarray(length, jnp.int32)
+    x = params["tok_embed"][tokens]
+    x = shard(x, ("batch", None, None))
+
+    def body(x, xs):
+        p_period, c_period = xs
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            keyname = f"{i:02d}_{kind}"
+            x, new_c[keyname] = _layer_chunk(cfg, kind, p_period[keyname], x,
+                                             c_period[keyname], off, length)
+        return x, new_c
+
+    _, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    return {"pos": cache["pos"] + length, "blocks": new_blocks}
+
+
+def copy_prefix(pool: dict, src_slot, lane: dict, n) -> dict:
+    """Implant the first ``n`` cache positions of pool lane ``src_slot`` into a
+    batch-1 ``lane`` (radix-cache prefix reuse: GRPO siblings / multi-turn
+    re-entries pay O(suffix) prefill instead of O(full prompt)).
+
+    Attention-only caches: every blocks leaf is (P, B, cap, KV, hd) with the
+    position axis at 2.  ``src_slot``/``n`` are traced, so one compiled kernel
+    serves every (source lane, match length).  Sets ``lane["pos"] = n``.
+    """
+    src_slot = jnp.asarray(src_slot, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+
+    def blend(dst, src):
+        src_lane = lax.dynamic_slice_in_dim(src, src_slot, 1, axis=1)
+        keep = jnp.arange(dst.shape[2])[None, None, :, None, None] < n
+        return jnp.where(keep, src_lane.astype(dst.dtype), dst)
+
+    blocks = jax.tree.map(blend, lane["blocks"], pool["blocks"])
+    pos = jnp.full_like(lane["pos"], n)
+    return {"pos": pos, "blocks": blocks}
+
+
 def _sinusoidal_at(pos, d, dtype):
     pos = jnp.atleast_1d(pos).astype(F32)                    # (B,) per-slot positions
     dim = jnp.arange(d // 2, dtype=F32)

@@ -72,7 +72,8 @@ class HeddleTrainer:
         tcfg = self.tcfg
         for w in self.workers:
             w.params = self.params                     # weight sync (colocated update)
-            w.store.clear()
+            w.reset_cache()      # drop resident AND retired KV: stale-weight prefixes
+                                 # must never be implanted into post-update admissions
         # trajectory-aware placement: predicted length ~ prompt length heuristic at t=0
         # (group_size samples per task, placed by the presorted DP)
         n = len(tasks) * tcfg.group_size

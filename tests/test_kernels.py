@@ -148,3 +148,32 @@ def test_mamba_scan_kernel_chunk_invariance():
                               interpret=True) for c in (8, 32, 64)]
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+
+def test_use_pallas_decode_flag_matches_reference_engine_path():
+    """ModelConfig.use_pallas_decode routes layers.attention_decode through the
+    Pallas flash-decode kernel (interpret mode off-TPU); decode logits must match
+    the jnp-oracle path the engine uses by default."""
+    from dataclasses import replace
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=1)
+    params = M.init_params(cfg, KEY)
+    prompt = jnp.asarray([[5, 7, 9, 11]], jnp.int32)
+    _, _, cache_ref = M.forward_full(cfg, params, {"tokens": prompt}, capacity=32)
+    cfg_p = replace(cfg, use_pallas_decode=True)
+    _, _, cache_p = M.forward_full(cfg_p, params, {"tokens": prompt}, capacity=32)
+
+    tok = jnp.asarray([[13]], jnp.int32)
+    logits_ref, cache_ref = M.decode_step(cfg, params, cache_ref, tok)
+    logits_p, cache_p = M.decode_step(cfg_p, params, cache_p, tok)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_ref),
+                               atol=2e-5, rtol=2e-5)
+    # and a second step (the caches written by both paths agree too)
+    tok2 = jnp.argmax(logits_ref, -1)[:, None].astype(jnp.int32)
+    logits_ref2, _ = M.decode_step(cfg, params, cache_ref, tok2)
+    logits_p2, _ = M.decode_step(cfg_p, params, cache_p, tok2)
+    np.testing.assert_allclose(np.asarray(logits_p2), np.asarray(logits_ref2),
+                               atol=2e-5, rtol=2e-5)

@@ -54,3 +54,52 @@ def test_hit_accounting_is_monotone_and_consistent(ops):
     assert idx.lookups == lookups
     assert idx.hits <= idx.lookups
     assert idx.hit_tokens >= idx.hits
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(TOKENS, min_size=1, max_size=8), TOKENS)
+def test_full_vs_partial_hits_are_separated(corpus, query):
+    """A whole-query match is a full hit; a nonzero proper-prefix match is a
+    partial hit — never both, and ``hits`` is their sum (affinity stats must not
+    count a 2-token graze as a cache home)."""
+    idx = PrefixCacheIndex()
+    for toks in corpus:
+        idx.insert(toks)
+    n = idx.match_len(query)
+    if n == len(query) and n > 0:
+        assert (idx.full_hits, idx.partial_hits) == (1, 0)
+    elif n > 0:
+        assert (idx.full_hits, idx.partial_hits) == (0, 1)
+    else:
+        assert (idx.full_hits, idx.partial_hits) == (0, 0)
+    assert idx.hits == idx.full_hits + idx.partial_hits
+
+
+def test_node_cap_bounds_memory_and_prunes_lru():
+    """Accounting mode stays bounded: inserts past ``max_nodes`` prune the
+    least-recently-used subtrees, and recently-touched prefixes survive."""
+    idx = PrefixCacheIndex(max_nodes=64)
+    for i in range(64):
+        idx.insert([i, 1000 + i, 2000 + i])          # 3 nodes per sequence
+    assert idx.node_count <= 64
+    hot = [63, 1063, 2063]                           # most recent insert
+    assert idx.match_len(hot) == 3                   # hot path survives the cap
+    idx.insert(list(range(3000, 3040)))              # one long cold-pruning insert
+    assert idx.node_count <= 64
+
+
+def test_lane_refs_match_and_invalidate():
+    """(lane, span) refs: match_lane returns the deepest live ref; invalidate()
+    makes an overwritten lane's refs unreachable without touching accounting."""
+    idx = PrefixCacheIndex()
+    idx.insert([1, 2, 3, 4], slot=7)
+    n, slot = idx.match_lane([1, 2, 3, 4, 5])
+    assert (n, slot) == (4, 7)
+    idx.insert([1, 2, 9], slot=3)                    # diverging branch, other lane
+    n, slot = idx.match_lane([1, 2, 9, 9])
+    assert (n, slot) == (3, 3)
+    idx.invalidate(7)                                # lane 7 overwritten
+    n, slot = idx.match_lane([1, 2, 3, 4])
+    assert slot != 7 and n <= 2                      # only the shared [1,2] via lane 3
+    idx.insert([1, 2, 3, 4], slot=7)                 # re-admitted at a new epoch
+    assert idx.match_lane([1, 2, 3, 4]) == (4, 7)

@@ -81,3 +81,37 @@ def test_interference_slows_down_crowded_workers(bench):
                     kv_weight_ratio=0.05, seed=0, placement="cache_aware",
                     scheduler="rr", degrees=(1,) * 8)
     assert slow.makespan > fast.makespan
+
+
+def test_measured_reuse_rate_scales_cache_miss_prefill(bench):
+    """The simulator's cache model consumes the engine's *measured* radix reuse:
+    lower measured reuse means a sibling arrival re-prefills more of the shared
+    prompt, so miss tokens grow monotonically as the rate drops (rate=1.0 is the
+    paper's assumed-full-reuse default)."""
+    batch, pred = bench
+    kw = dict(gpu_budget=8, max_batch=16, scheduler="rr",
+              placement="least_load", degrees=(1,) * 8, seed=0)
+    assumed = simulate(copy.deepcopy(batch), pred, **kw)
+    full = simulate(copy.deepcopy(batch), pred, measured_reuse_rate=1.0, **kw)
+    half = simulate(copy.deepcopy(batch), pred, measured_reuse_rate=0.5, **kw)
+    none = simulate(copy.deepcopy(batch), pred, measured_reuse_rate=0.0, **kw)
+    assert assumed.cache_miss_prefill_tokens == full.cache_miss_prefill_tokens
+    assert full.cache_miss_prefill_tokens <= half.cache_miss_prefill_tokens \
+        <= none.cache_miss_prefill_tokens
+
+
+def test_controller_aggregates_engine_dispatch_stats():
+    """Engine dispatch_stats -> controller.record_worker_stats ->
+    measured_reuse_rate: the number SimConfig.measured_reuse_rate consumes."""
+    from repro.core.controller import HeddleController
+    from repro.core.placement import InterferenceModel
+    from repro.core.resource_manager import WorkerLatencyModel
+
+    ctrl = HeddleController(ProgressivePredictor(), InterferenceModel.analytic(0.02),
+                            WorkerLatencyModel(), gpu_budget=2)
+    assert ctrl.measured_reuse_rate is None          # no telemetry yet
+    ctrl.record_worker_stats(0, {"reused_tokens": 30, "prefilled_tokens": 70})
+    ctrl.record_worker_stats(1, {"reused_tokens": 10, "prefilled_tokens": 90})
+    assert ctrl.measured_reuse_rate == pytest.approx(0.2)
+    cfg = SimConfig(measured_reuse_rate=ctrl.measured_reuse_rate)
+    assert cfg.measured_reuse_rate == pytest.approx(0.2)

@@ -132,3 +132,47 @@ def test_profiler_produces_monotone_interference(setup):
     from repro.core.placement import presorted_dp
     res = presorted_dp([100.0, 50, 10, 5], 2, F)
     assert res.makespan > 0
+
+
+def test_kv_bytes_stable_across_pool_growth(setup):
+    """Regression: kv_bytes reports the per-lane footprint from the lane *shapes*,
+    so the figure is identical before and after pool growth (the old computation
+    divided the live pool by the current max_slots, tying the answer to growth
+    timing)."""
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=32, max_slots=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    w.prefill(1, [5, 7])
+    before = w.kv_bytes(1)
+    w.prefill(2, [5, 9])
+    w.prefill(3, [5, 11])                         # overflow: pool doubles
+    assert w.pool_grows == 1
+    assert w.kv_bytes(1) == before                # post-growth call, same figure
+    # and it matches an independently-constructed batch-1 lane
+    lane = M.init_cache(cfg, params, 1, 32)
+    want = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(lane))
+    assert before == want
+
+
+def test_dispatch_stats_report_admission_split(setup):
+    """dispatch_stats surfaces the measured reuse/prefill token split the
+    controller's placement telemetry consumes."""
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, max_slots=4,
+                      sampler=SamplerConfig(temperature=0.0), chunk_size=8)
+    w.prefill(1, [5, 7, 9, 11])
+    w.prefill(2, [5, 7, 9, 11])                   # sibling: implants the prompt
+    s = w.dispatch_stats()
+    assert s["prefilled_tokens"] == 4 and s["reused_tokens"] == 4
+    assert s["full_hits"] == 1 and s["lookups"] == 2
+    assert s["prefill_dispatches"] == 1           # one chunk; sibling copied, no chunks
+
+
+def test_decode_zero_tokens_is_a_noop(setup):
+    """Edge: decode(n_tokens=0) returns empty streams without touching state."""
+    cfg, params = setup
+    w = RolloutWorker(cfg, params, capacity=64, max_slots=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    w.prefill(1, [5, 7, 9])
+    assert w.decode([1], 0) == {1: []}
+    assert w.store[1].tokens == [5, 7, 9]
