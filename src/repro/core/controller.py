@@ -90,6 +90,8 @@ class HeddleConfig:
     rank_hysteresis: float = 0.50         # migrate only on a material prediction change
     migration_cooldown_steps: int = 2     # steps between migrations of one trajectory
     max_migrations_per_traj: int = 2
+    migration_load_gap: int = 4           # min live-count gap before migrating (material
+                                          # benefit: KV transfer + re-warm are not free)
     max_group_count: float | None = None  # worker batch-slot capacity (DP group cap)
     work_aware_dp: bool = True            # beyond-paper DP cost (EXPERIMENTS.md §Perf);
                                           # False = paper-faithful Formula 2
@@ -119,6 +121,11 @@ class HeddleController:
         self.groups: list[list[int]] = []
         self._traj_index: dict[int, Trajectory] = {}
         self.worker_stats: dict[int, dict] = {}   # wid -> engine dispatch_stats()
+        self._finished_ids: set[int] = set()      # on_finish idempotency guard
+        # migrations emitted but not yet executed: load accounting moves only when
+        # the transfer actually launches (commit_migration) — emitting a request the
+        # transmission scheduler later drops must not leak worker counts
+        self._pending_migration: dict[int, MigrationRequest] = {}
 
     # ------------------------------------------------------------ telemetry (measured)
     def record_worker_stats(self, worker_id: int, stats: dict) -> None:
@@ -219,6 +226,8 @@ class HeddleController:
         self._live = np.ones(len(trajectories), dtype=bool)
         # per-worker live-trajectory counts (migration load feedback)
         self._worker_count = np.array([len(g) for g in groups], dtype=np.int64)
+        self._finished_ids.clear()
+        self._pending_migration.clear()
         for t in trajectories:
             t._last_migration_pred = t.predicted_total    # hysteresis anchor
         return groups
@@ -238,8 +247,12 @@ class HeddleController:
         slot = self._slots.get(traj.traj_id)
         if slot is None or traj.finished:
             return None
+        # refresh the rank state even when no new request may be emitted, so
+        # other trajectories never rank against a stale priority
         self._pred_totals[slot] = traj.priority
         self._live[slot] = not traj.finished
+        if traj.traj_id in self._pending_migration:
+            return None                   # one in-flight migration per trajectory
         live_preds = self._pred_totals[self._live]
         n_active = int(self._live.sum())
         if n_active == 0:
@@ -254,7 +267,8 @@ class HeddleController:
         target = lo + int(np.argmin(self._worker_count[lo:hi]))
         # material-benefit gate: a migration must buy a real interference reduction
         # (KV transfer + re-warm are not free), so require a clear load gap
-        if self._worker_count[target] + 4 > self._worker_count[traj.worker_id]:
+        if self._worker_count[target] + self.config.migration_load_gap \
+                > self._worker_count[traj.worker_id]:
             return None
         if target != traj.worker_id:
             # hysteresis: only migrate when the prediction moved materially since the
@@ -272,15 +286,37 @@ class HeddleController:
                 return None
             traj._last_mig_step = traj.num_steps
             traj._last_migration_pred = traj.priority
-            self._worker_count[traj.worker_id] -= 1
-            self._worker_count[target] += 1
             req = MigrationRequest(traj.traj_id, traj.worker_id, target,
                                    length=traj.predicted_total)
+            self._pending_migration[traj.traj_id] = req
             self.transmission.submit(req)
             return req
         return None
 
+    def commit_migration(self, traj_id: int) -> Optional[MigrationRequest]:
+        """The KV transfer for ``traj_id`` actually launched: move load accounting.
+
+        Idempotent — a second commit (or a commit for a request that was never
+        emitted) is a no-op, so runtimes can call it from completion paths without
+        tracking which requests they already acknowledged."""
+        req = self._pending_migration.pop(traj_id, None)
+        if req is not None:
+            self._worker_count[req.src] -= 1
+            self._worker_count[req.dst] += 1
+        return req
+
+    def abort_migration(self, traj_id: int) -> None:
+        """Drop an emitted-but-unexecuted migration (trajectory resumed/finished).
+
+        No load accounting to undo — counts move only at commit."""
+        if self._pending_migration.pop(traj_id, None) is not None:
+            self.transmission.cancel(traj_id)
+
     def on_finish(self, traj: Trajectory) -> None:
+        if traj.traj_id in self._finished_ids:
+            return                        # idempotent: double-finish must not
+        self._finished_ids.add(traj.traj_id)  # double-decrement worker counts
+        self.abort_migration(traj.traj_id)
         slot = self._slots.get(traj.traj_id)
         if slot is not None:
             self._live[slot] = False

@@ -100,11 +100,16 @@ class PPSScheduler(_HeapScheduler):
 
     preemptive = True
 
-    def __init__(self, preemption_margin: float = 1.0) -> None:
+    def __init__(self, preemption_margin: float = 1.0,
+                 preemption_floor: float = 1.0) -> None:
         super().__init__()
         # Hysteresis: only preempt when the pending request's priority exceeds the
-        # victim's by this multiplicative margin (prevents eviction thrash).
+        # victim's by this multiplicative margin (prevents eviction thrash).  The
+        # margin alone is vacuous when the victim's priority is 0 (cold predictor:
+        # anything > 0 * margin), so an additive floor guarantees a minimum
+        # absolute priority gap before any eviction.
         self.preemption_margin = preemption_margin
+        self.preemption_floor = preemption_floor
 
     def submit(self, traj: Trajectory, now: float) -> None:  # Alg.1 lines 1-4
         traj.priority = traj.predicted_total
@@ -122,7 +127,7 @@ class PPSScheduler(_HeapScheduler):
         if top is None or not active:
             return None
         victim = min(active, key=lambda t: t.priority)
-        if top > victim.priority * self.preemption_margin:
+        if top > victim.priority * self.preemption_margin + self.preemption_floor:
             return victim
         return None
 

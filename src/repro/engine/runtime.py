@@ -1,0 +1,547 @@
+"""Event-driven trajectory-centric rollout runtime: control plane meets data plane.
+
+This module closes the seam the repo previously left open: the trajectory-level
+mechanisms of the paper (§4 scheduling/preemption, §5.3 tool-interval migration,
+§4.1 progressive prediction) only ever ran inside the discrete-event *simulator*,
+while the real ``RolloutWorker`` JAX data plane was driven by a static one-shot
+loop with no tool calls, no queues, and no preemption.  ``RolloutRuntime`` drives
+real workers through full agentic trajectories — generate → tool call → absorb →
+repeat — under the real control plane:
+
+  * **per-worker scheduler queues** (``core.scheduler``: pps | fcfs | rr | sjf)
+    gate *decode concurrency* (``max_active`` lanes decode together; the paper's
+    batch-size-driven interference premise), with real preemptive execution:
+    ``PPSScheduler.preempt_victim`` evicts the weakest active trajectory via
+    ``worker.preempt`` — a mask flip, the KV cache persists in its lane;
+  * **progressive prediction refresh** on every tool return
+    (``HeddleController.on_step_complete`` → ``ProgressivePredictor.predict``),
+    so queue priorities track runtime context, not prompt-time guesses;
+  * **opportunistic migration during tool-call idle intervals**: controller
+    emits ``MigrationRequest``s, the ``TransmissionScheduler`` batches them
+    endpoint-exclusively, and the runtime executes real ``migrate_out`` /
+    ``migrate_in`` lane transfers whose duration is the *measured* package bytes
+    over the configured link;
+  * **telemetry feedback**: each worker's ``dispatch_stats()`` flows through
+    ``record_worker_stats`` so ``measured_reuse_rate`` reflects the run.
+
+Time is a **virtual event clock**: decoded tokens are real (real model, real KV
+lanes, real sampling keys), but each decode quantum of ``q`` tokens at batch
+``b`` costs ``q * token_time * F(b)`` virtual seconds and tool calls cost their
+workload-sampled latencies.  That keeps end-to-end makespans deterministic,
+hardware-independent, and long-tail-faithful while the data plane does the
+actual token work — the same methodology the paper uses to profile §5.2, now
+wrapped around the real engine.  See docs/runtime.md for the lifecycle
+(PENDING → GENERATING → TOOL_CALL → MIGRATING → FINISHED) and invariants.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.controller import HeddleController
+from repro.core.migration import MigrationRequest, migration_time
+from repro.core.scheduler import make_scheduler
+from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
+from repro.engine.worker import RolloutWorker
+from repro.engine.workload import TrajectoryPlan
+
+
+# ---------------------------------------------------------------- configuration
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    scheduler: str = "pps"               # pps | fcfs | rr | sjf (per-worker queues)
+    migration: bool = True               # tool-interval KV migration (§5.3)
+    max_active: int = 4                  # decode-concurrency slots per worker
+    quantum: int = 8                     # decode tokens per scheduling quantum
+    token_time: float = 0.02             # virtual s/token at batch 1 (per worker)
+    kv_weight_ratio: float = 0.02        # interference F(b) = 1 + r * b
+    prefill_speedup: float = 100.0       # prefill token cost vs decode token cost
+    link_bandwidth: float = 2e9          # virtual migration link (bytes/s)
+    tool_latency_scale: float = 1.0      # scales the workload's sampled latencies
+    # preemption hysteresis applied to preemptive schedulers (PPS): progressive
+    # predictions are noisy early in a trajectory, and at that stage every
+    # low-margin preemption is a coin flip that only adds requeue delay — raise
+    # these when the batch is heavily oversubscribed (units: predicted tokens)
+    preemption_margin: float = 1.0
+    preemption_floor: float = 2.0
+    seed: int = 0
+
+
+@dataclass
+class RuntimeResult:
+    makespan: float                      # virtual seconds to drain the batch
+    total_tokens: int                    # real tokens decoded across all workers
+    throughput: float                    # tokens per virtual second
+    preemptions: int
+    migrations: int
+    queue_delay_mean: float              # over per-step queue delays
+    queue_delay_p99: float
+    trajectories: list[Trajectory] = field(default_factory=list)
+    worker_stats: dict[int, dict] = field(default_factory=dict)
+    wall_time: float = 0.0               # real seconds spent in the data plane
+    events: int = 0
+
+
+@dataclass
+class ToolResult:
+    latency: float
+    failed: bool
+    output_tokens: list[int]
+
+
+class ToolEnvironment:
+    """Deterministic simulated tool backend (paper §3 'Tool Manager', elastic FaaS).
+
+    Outcomes — latency, failure, output size — come from the trajectory's
+    pre-rolled ``TrajectoryPlan`` (``engine.workload`` distributions, Table 1
+    latency calibration); the output token *ids* are drawn from an rng seeded by
+    (seed, traj_id, step), so every run over the same workload absorbs identical
+    tool tokens regardless of scheduling order.
+    """
+
+    def __init__(self, seed: int = 0, latency_scale: float = 1.0,
+                 vocab: tuple[int, int] = (5, 105)):
+        self.seed = seed
+        self.latency_scale = latency_scale
+        self.vocab = vocab
+        self.invocations = 0
+        self.total_latency = 0.0
+
+    def invoke(self, traj: Trajectory, step: int) -> ToolResult:
+        plan: TrajectoryPlan = traj.payload
+        lat = float(plan.tool_latency[step]) * self.latency_scale
+        n_out = int(plan.tool_output_tokens[step])
+        rng = np.random.default_rng((self.seed, traj.traj_id, step))
+        toks = [int(t) for t in rng.integers(*self.vocab, n_out)]
+        self.invocations += 1
+        self.total_latency += lat
+        return ToolResult(lat, bool(plan.tool_failed[step]), toks)
+
+
+# ---------------------------------------------------------------- workload helpers
+
+def miniaturize(trajectories: list[Trajectory], *, max_steps: int | None = None,
+                max_total_tokens: int = 48, max_prompt: int = 12,
+                max_tool_tokens: int = 6, min_step_tokens: int = 2
+                ) -> list[Trajectory]:
+    """Rescale a paper-scale workload onto the real reduced-model engine.
+
+    ``engine.workload.generate`` rolls plans at paper magnitudes (8K-token
+    medians, 40K tails) that a reduced CPU model cannot decode; this maps every
+    plan's token counts into engine range *multiplicatively* — one shared scale
+    factor per quantity — so the lognormal long-tail shape (the thing the
+    scheduler is being evaluated on) survives the shrink.  Tool latencies shrink
+    by the *same* factor as generation tokens: a step's generation time is
+    ``tokens * token_time``, so scaling both keeps the paper's tool/generation
+    time ratio (Table 1 latencies vs ~420-token steps, ≈0.05) — leaving
+    latencies at full scale would park every trajectory in tool calls and erase
+    the slot contention trajectory-level scheduling exists to manage.  Plans are
+    optionally truncated to ``max_steps`` agentic steps first (note the
+    truncation itself flattens the step-count tail — benchmarks that evaluate
+    long-tail scheduling should leave it None).  Mutates in place.
+    """
+    n_steps = {t.traj_id: (len(t.payload.gen_tokens) if max_steps is None
+                           else min(len(t.payload.gen_tokens), max_steps))
+               for t in trajectories}
+    peak_total = max(sum(t.payload.gen_tokens[:n_steps[t.traj_id]])
+                     for t in trajectories)
+    peak_prompt = max(t.prompt_tokens for t in trajectories)
+    peak_tool = max((o for t in trajectories
+                     for o in t.payload.tool_output_tokens[:n_steps[t.traj_id]]),
+                    default=1)
+    g_scale = max_total_tokens / max(peak_total, 1)
+    p_scale = max_prompt / max(peak_prompt, 1)
+    o_scale = max_tool_tokens / max(peak_tool, 1)
+    for t in trajectories:
+        p: TrajectoryPlan = t.payload
+        n = n_steps[t.traj_id]
+        gen = [max(min_step_tokens, round(g * g_scale)) for g in p.gen_tokens[:n]]
+        touts = [max(1, round(o * o_scale)) for o in p.tool_output_tokens[:n]]
+        fail = list(p.tool_failed[:n])
+        fail[-1] = False                 # terminal step's tool ends the episode
+        lat = [l * g_scale for l in p.tool_latency[:n]]
+        t.payload = TrajectoryPlan(gen, lat, fail, touts)
+        t.prompt_tokens = max(4, round(t.prompt_tokens * p_scale))
+        t.context_tokens = t.prompt_tokens
+        t.true_total_tokens = sum(gen)
+        t.true_num_steps = n
+    return trajectories
+
+
+def synth_prompts(trajectories: list[Trajectory], seed: int = 0,
+                  vocab: tuple[int, int] = (5, 105)) -> dict[int, list[int]]:
+    """Deterministic prompt token ids; GRPO siblings (same prompt_id) share ids,
+    so co-placed groups exercise the engine's radix-cache prefix implants."""
+    prompts: dict[int, list[int]] = {}
+    for t in trajectories:
+        rng = np.random.default_rng((seed, t.prompt_id))
+        prompts[t.traj_id] = [int(x) for x in rng.integers(*vocab, t.prompt_tokens)]
+    return prompts
+
+
+def required_capacity(trajectories: list[Trajectory]) -> int:
+    """Max lane occupancy any trajectory can reach: prompt + all gen + all tool."""
+    return max(t.prompt_tokens + t.payload.total_tokens
+               + sum(t.payload.tool_output_tokens) for t in trajectories)
+
+
+def build_workbench(task: str = "coding", n_prompts: int = 6, group_size: int = 4,
+                    seed: int = 0, *, base_steps: float = 3.0,
+                    max_steps: int | None = None, max_total_tokens: int = 96,
+                    max_prompt: int = 12, max_tool_tokens: int = 6,
+                    min_step_tokens: int = 1, hist_prompts: int = 24):
+    """Miniaturized long-tail batch + a predictor fitted on a disjoint history.
+
+    The predictor trains on a *replayed* history workload at the same miniature
+    scale the runtime decodes at — same contract as the paper's harvesting of
+    historical trajectories, so predictions land in the units the scheduler
+    queues on.  Returns ``(batch, predictor)``.
+    """
+    from repro.core.predictor import ProgressivePredictor
+    from repro.engine.workload import WorkloadConfig, generate, replay_finished
+    mini = dict(max_steps=max_steps, max_total_tokens=max_total_tokens,
+                max_prompt=max_prompt, max_tool_tokens=max_tool_tokens,
+                min_step_tokens=min_step_tokens)
+    wl = dict(task=task, group_size=group_size, base_steps=base_steps)
+    hist = replay_finished(miniaturize(
+        generate(WorkloadConfig(n_prompts=hist_prompts, seed=seed + 10_000, **wl)),
+        **mini))
+    predictor = ProgressivePredictor().fit_trajectories(hist)
+    batch = miniaturize(
+        generate(WorkloadConfig(n_prompts=n_prompts, seed=seed, **wl)), **mini)
+    return batch, predictor
+
+
+def make_runtime(cfg, params, batch: list[Trajectory], predictor,
+                 n_workers: int = 2, config: RuntimeConfig = RuntimeConfig(), *,
+                 capacity: int | None = None, migration_load_gap: int = 1,
+                 migration_cooldown_steps: int = 1, rank_hysteresis: float = 0.2,
+                 temperature: float = 0.8) -> "RolloutRuntime":
+    """Wire controller + real workers + tool environment into a RolloutRuntime.
+
+    Controller gates default to small-cluster values (load gap 1, short
+    cooldown): at a few workers and a few dozen live trajectories, the
+    simulator-scale defaults never see a gap wide enough to open.
+    """
+    from repro.core.controller import HeddleConfig
+    from repro.core.placement import InterferenceModel
+    from repro.core.resource_manager import WorkerLatencyModel
+    from repro.engine.sampler import SamplerConfig
+    controller = HeddleController(
+        predictor, InterferenceModel.analytic(config.kv_weight_ratio),
+        WorkerLatencyModel(t1=config.token_time), gpu_budget=n_workers,
+        config=HeddleConfig(scheduler=config.scheduler, adaptive_resources=False,
+                            migration=config.migration,
+                            migration_load_gap=migration_load_gap,
+                            migration_cooldown_steps=migration_cooldown_steps,
+                            rank_hysteresis=rank_hysteresis),
+        max_workers=n_workers)
+    controller.degrees = [1] * n_workers
+    cap = max(capacity or 0, required_capacity(batch))
+    workers = [RolloutWorker(cfg, params, capacity=cap, max_slots=len(batch),
+                             worker_id=i,
+                             sampler=SamplerConfig(temperature=temperature),
+                             seed=config.seed)
+               for i in range(n_workers)]
+    env = ToolEnvironment(seed=config.seed,
+                          latency_scale=config.tool_latency_scale)
+    return RolloutRuntime(workers, controller, batch, env, config)
+
+
+# ---------------------------------------------------------------- runtime
+
+class _WorkerState:
+    """One rollout worker's runtime view: engine + queue + active decode set."""
+
+    def __init__(self, wid: int, engine: RolloutWorker, scheduler_name: str):
+        self.wid = wid
+        self.engine = engine
+        self.scheduler = make_scheduler(scheduler_name)
+        self.active: set[int] = set()    # traj_ids currently decoding
+        self.clock = 0.0                 # this worker's virtual time frontier
+        self.sleeping = True             # no worker_ready event in flight
+
+
+class RolloutRuntime:
+    """Drives real RolloutWorkers through full agentic trajectories, event-driven.
+
+    The caller supplies constructed workers (uniform ``capacity`` — migration
+    moves lanes between pools), a ``HeddleController`` with a fitted predictor,
+    the trajectory batch (``engine.workload`` plans, typically ``miniaturize``d),
+    and a ``ToolEnvironment``.  ``run()`` executes the batch to completion and
+    returns deterministic end-to-end metrics.
+    """
+
+    def __init__(self, workers: list[RolloutWorker], controller: HeddleController,
+                 trajectories: list[Trajectory], tool_env: ToolEnvironment,
+                 config: RuntimeConfig = RuntimeConfig(),
+                 prompts: dict[int, list[int]] | None = None):
+        self.cfg = config
+        self.controller = controller
+        self.env = tool_env
+        self.trajs = list(trajectories)
+        self.by_id = {t.traj_id: t for t in self.trajs}
+        self.prompts = prompts if prompts is not None \
+            else synth_prompts(self.trajs, seed=config.seed)
+        cap = min(w.capacity for w in workers)
+        need = required_capacity(self.trajs)
+        if need > cap:
+            raise ValueError(f"worker capacity {cap} < max trajectory context "
+                             f"{need}; raise capacity or miniaturize harder")
+        self.workers = [_WorkerState(w.worker_id, w, config.scheduler)
+                        for w in workers]
+        for ws in self.workers:
+            if hasattr(ws.scheduler, "preemption_margin"):
+                ws.scheduler.preemption_margin = config.preemption_margin
+                ws.scheduler.preemption_floor = config.preemption_floor
+        self.interference = controller.interference
+        # runtime lifecycle state
+        self.step_remaining: dict[int, int] = {}     # mid-step decode budget
+        self.pending_tool: dict[int, list[int]] = {} # tool output awaiting absorb
+        self.in_flight: dict[int, tuple[dict, int]] = {}  # migration (pkg, dst)
+        self.tool_arrived: set[int] = set()          # tool done while KV in flight
+        self.preemptions = 0
+        self.migrations = 0
+        self.total_tokens = 0
+        self.wall = 0.0
+        self._evq: list[tuple[float, int, str, int]] = []
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------ event plumbing
+    def _push(self, t: float, kind: str, payload: int) -> None:
+        heapq.heappush(self._evq, (t, next(self._seq), kind, payload))
+
+    def _submit(self, traj: Trajectory, now: float) -> None:
+        """Queue the trajectory's next generation step on its current worker."""
+        ws = self.workers[traj.worker_id]
+        traj._queued_at = now
+        ws.scheduler.submit(traj, now)
+        if ws.sleeping:
+            ws.sleeping = False
+            self._push(max(now, ws.clock), "worker_ready", ws.wid)
+
+    # ------------------------------------------------------------ dispatch / preempt
+    def _start(self, ws: _WorkerState, traj: Trajectory, now: float) -> None:
+        tid = traj.traj_id
+        traj._step_queue_delay = getattr(traj, "_step_queue_delay", 0.0) \
+            + max(0.0, now - getattr(traj, "_queued_at", now))
+        if tid not in self.step_remaining:           # fresh step (not a resume)
+            plan: TrajectoryPlan = traj.payload
+            self.step_remaining[tid] = int(plan.gen_tokens[traj.num_steps])
+        traj.phase = TrajectoryPhase.GENERATING
+        ws.active.add(tid)
+
+    def _preempt(self, ws: _WorkerState, victim: Trajectory, now: float) -> None:
+        """Alg. 1 lines 5-10 on the real engine: evict, persist KV, requeue."""
+        tid = victim.traj_id
+        ws.engine.preempt(tid)                       # mask flip; lane stays resident
+        ws.active.discard(tid)                       # step_remaining persists: resume
+        victim.preemptions += 1                      # continues mid-step
+        self.preemptions += 1
+        victim.phase = TrajectoryPhase.PREEMPTED
+        victim._queued_at = now
+        ws.scheduler.submit(victim, now)
+
+    def _dispatch(self, ws: _WorkerState, now: float) -> None:
+        while len(ws.active) < self.cfg.max_active and len(ws.scheduler):
+            traj = ws.scheduler.pop(now)
+            if traj is None:
+                break
+            self._start(ws, traj, now)
+        if ws.scheduler.preemptive and len(ws.scheduler):
+            for _ in range(len(ws.active)):
+                victim = ws.scheduler.preempt_victim(
+                    [self.by_id[t] for t in ws.active])
+                if victim is None:
+                    break
+                self._preempt(ws, victim, now)
+                nxt = ws.scheduler.pop(now)
+                if nxt is not None:
+                    self._start(ws, nxt, now)
+
+    # ------------------------------------------------------------ decode quantum
+    def _on_worker_ready(self, ws: _WorkerState, now: float) -> None:
+        now = max(now, ws.clock)
+        self._dispatch(ws, now)
+        if not ws.active:
+            ws.sleeping = True
+            return
+        ids = sorted(ws.active)
+        q = min(self.cfg.quantum, min(self.step_remaining[t] for t in ids))
+        t0 = time.perf_counter()
+        out = ws.engine.decode(ids, q)               # REAL tokens into real lanes
+        self.wall += time.perf_counter() - t0
+        dt = q * self.cfg.token_time * float(self.interference(len(ids)))
+        end = now + dt
+        ws.clock = end
+        for tid in ids:
+            got = len(out[tid])
+            self.total_tokens += got
+            self.step_remaining[tid] -= got
+            traj = self.by_id[tid]
+            traj._step_gen_time = getattr(traj, "_step_gen_time", 0.0) + dt
+            if self.step_remaining[tid] <= 0:
+                ws.active.discard(tid)
+                del self.step_remaining[tid]
+                self._complete_step(traj, ws, end)
+        self._dispatch(ws, end)                      # refill before the next quantum
+        if ws.active:
+            self._push(end, "worker_ready", ws.wid)
+        else:
+            ws.sleeping = True
+
+    # ------------------------------------------------------------ step lifecycle
+    def _complete_step(self, traj: Trajectory, ws: _WorkerState, now: float) -> None:
+        plan: TrajectoryPlan = traj.payload
+        s = traj.num_steps
+        terminal = s + 1 >= plan.num_steps
+        if terminal:
+            # the terminal step's tool ends the episode: record the plan's
+            # outcome for predictor-feature parity (harvest replays it too) but
+            # never invoke the environment — no tool actually runs
+            tool = ToolResult(float(plan.tool_latency[s]) * self.env.latency_scale,
+                              bool(plan.tool_failed[s]),
+                              [0] * int(plan.tool_output_tokens[s]))
+        else:
+            tool = self.env.invoke(traj, s)
+        traj.record_step(StepRecord(
+            s, int(plan.gen_tokens[s]), tool.latency, tool_failed=tool.failed,
+            tool_output_tokens=len(tool.output_tokens),
+            queue_delay=getattr(traj, "_step_queue_delay", 0.0),
+            gen_time=getattr(traj, "_step_gen_time", 0.0)))
+        traj._step_queue_delay = 0.0
+        traj._step_gen_time = 0.0
+        traj.record_tool_output(len(tool.output_tokens))
+        self.controller.record_worker_stats(ws.wid, ws.engine.dispatch_stats())
+        if terminal:
+            traj.finished = True
+            traj.finish_time = now
+            traj.phase = TrajectoryPhase.FINISHED
+            self.controller.on_finish(traj)
+            ws.engine.release(traj.traj_id)          # lane retires into radix cache
+            return
+        traj.phase = TrajectoryPhase.TOOL_CALL
+        self.pending_tool[traj.traj_id] = tool.output_tokens
+        self._push(now + tool.latency, "tool_done", traj.traj_id)
+        # progressive refresh + migration decision, masked by the tool interval
+        req = self.controller.on_step_complete(traj, ())
+        if req is not None and self.cfg.migration:
+            for r in self.controller.transmission.next_batch():
+                self._launch_migration(r, now)
+
+    # ------------------------------------------------------------ migration (§5.3)
+    def _launch_migration(self, req: MigrationRequest, now: float) -> None:
+        traj = self.by_id[req.traj_id]
+        if traj.phase is not TrajectoryPhase.TOOL_CALL or \
+                req.traj_id not in self.workers[req.src].engine.store:
+            # resumed, finished, or already moved: migrating now would stall the
+            # critical path — drop without touching load accounting
+            self.controller.transmission.complete(req.traj_id)
+            self.controller.abort_migration(req.traj_id)
+            return
+        pkg = self.workers[req.src].engine.migrate_out(req.traj_id)
+        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(pkg["cache"]))
+        self.controller.commit_migration(req.traj_id)
+        traj.phase = TrajectoryPhase.MIGRATING
+        traj.migrations += 1
+        self.migrations += 1
+        self.in_flight[req.traj_id] = (pkg, req.dst)
+        self._push(now + migration_time(nbytes, self.cfg.link_bandwidth),
+                   "migration_done", req.traj_id)
+
+    def _on_migration_done(self, tid: int, now: float) -> None:
+        pkg, dst = self.in_flight.pop(tid)
+        self.workers[dst].engine.migrate_in(pkg)     # lane lands in the new pool
+        traj = self.by_id[tid]
+        traj.worker_id = dst
+        self.controller.transmission.complete(tid)
+        for r in self.controller.transmission.next_batch():
+            self._launch_migration(r, now)
+        if tid in self.tool_arrived:                 # transfer outlived the tool
+            self.tool_arrived.discard(tid)
+            self._absorb_and_resume(traj, now)
+        else:                                        # fully masked by the tool call
+            traj.phase = TrajectoryPhase.TOOL_CALL
+
+    def _on_tool_done(self, tid: int, now: float) -> None:
+        if tid in self.in_flight:                    # KV still on the wire: wait
+            self.tool_arrived.add(tid)
+            return
+        self._absorb_and_resume(self.by_id[tid], now)
+
+    def _absorb_and_resume(self, traj: Trajectory, now: float) -> None:
+        # resuming invalidates any emitted-but-unlaunched migration: its target
+        # was chosen from now-stale load/rank data, and leaving it pending would
+        # both fire in some later tool interval and suppress fresh decisions
+        self.controller.abort_migration(traj.traj_id)
+        toks = self.pending_tool.pop(traj.traj_id, [])
+        if toks:                                     # chunked prefill into the lane
+            self.workers[traj.worker_id].engine.extend(traj.traj_id, toks)
+        self._submit(traj, now)
+
+    # ------------------------------------------------------------ run
+    def run(self) -> RuntimeResult:
+        cfg = self.cfg
+        wall0 = time.perf_counter()
+        for t in self.trajs:
+            t.predicted_remaining = self.controller.predictor.predict(t)
+            t.priority = t.predicted_total
+            t.submit_time = 0.0
+        if not self.controller.degrees:
+            self.controller.degrees = [1] * len(self.workers)
+        self.controller.initial_placement(self.trajs)
+        # admission: prefill each worker's group up front (lanes are memory; the
+        # scheduler gates decode *compute*).  Sibling-adjacent order maximizes
+        # radix-cache implants; admission cost lands on the worker's clock.
+        for ws in self.workers:
+            mine = [t for t in self.trajs if t.worker_id == ws.wid]
+            mine.sort(key=lambda t: (t.prompt_id, t.sample_id))
+            t0 = time.perf_counter()
+            for t in mine:
+                ws.engine.prefill(t.traj_id, self.prompts[t.traj_id])
+                ws.clock += len(self.prompts[t.traj_id]) * cfg.token_time \
+                    / cfg.prefill_speedup
+            self.wall += time.perf_counter() - t0
+        for t in self.trajs:
+            self._submit(t, 0.0)
+
+        guard = 0
+        now = 0.0
+        while self._evq:
+            guard += 1
+            if guard > 2_000_000:
+                raise RuntimeError("runtime event budget exceeded")
+            now, _, kind, payload = heapq.heappop(self._evq)
+            if kind == "worker_ready":
+                self._on_worker_ready(self.workers[payload], now)
+            elif kind == "tool_done":
+                self._on_tool_done(payload, now)
+            elif kind == "migration_done":
+                self._on_migration_done(payload, now)
+
+        unfinished = [t.traj_id for t in self.trajs if not t.finished]
+        assert not unfinished, f"runtime drained with live trajectories {unfinished}"
+        for ws in self.workers:                      # final telemetry snapshot
+            self.controller.record_worker_stats(ws.wid, ws.engine.dispatch_stats())
+        makespan = max(t.finish_time for t in self.trajs)
+        delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
+        return RuntimeResult(
+            makespan=makespan,
+            total_tokens=self.total_tokens,
+            throughput=self.total_tokens / makespan if makespan > 0 else 0.0,
+            preemptions=self.preemptions,
+            migrations=self.migrations,
+            queue_delay_mean=float(delays.mean()) if len(delays) else 0.0,
+            queue_delay_p99=float(np.quantile(delays, 0.99)) if len(delays) else 0.0,
+            trajectories=self.trajs,
+            worker_stats=dict(self.controller.worker_stats),
+            wall_time=time.perf_counter() - wall0,
+            events=guard,
+        )

@@ -356,10 +356,13 @@ class RolloutSimulator:
             if req.traj_id not in pending_tool:
                 # trajectory already resumed generating: migrating now would stall the
                 # critical path, so the router drops the request (paper §5.3 only
-                # migrates during tool intervals)
+                # migrates during tool intervals).  abort, not commit: the worker
+                # counts never moved for this request, so there is nothing to undo
                 self.controller.transmission.complete(req.traj_id)
+                self.controller.abort_migration(req.traj_id)
                 return
             traj = traj_by_id[req.traj_id]
+            self.controller.commit_migration(req.traj_id)
             kv = kv_cache_bytes(traj.context_tokens, cfg.model_layers,
                                 cfg.model_kv_heads, cfg.model_head_dim)
             dur = migration_time(kv, cfg.link_bandwidth)
@@ -372,6 +375,10 @@ class RolloutSimulator:
         def tool_done(traj: Trajectory, now: float):
             pending_tool.pop(traj.traj_id, None)
             tid = traj.traj_id
+            if tid not in migration_target:
+                # resuming with an emitted-but-unlaunched migration: drop it —
+                # its target was chosen from now-stale load/rank data
+                self.controller.abort_migration(tid)
             if tid in migration_target:
                 ready = migration_ready.get(tid, now)
                 if ready <= now:           # migration fully masked by the tool call

@@ -457,7 +457,17 @@ class RolloutWorker:
         Runs one fused device loop over the whole pool; lanes not requested (free,
         preempted, or co-resident but idle) ride along masked-out at frozen ``pos``.
         Requesting a preempted sequence implicitly resumes it (mask flip back).
+        A sequence whose ``finished`` flag is set is never resumed: it stays
+        masked-out at frozen ``pos`` and contributes an empty output stream, so a
+        scheduler naming a stopped sequence cannot push tokens past its stop token.
         """
+        requested = []
+        for sid in seq_ids:
+            if self.store[sid].finished:
+                continue
+            requested.append(sid)
+        if not requested:
+            return {sid: [] for sid in seq_ids}
         B = self.max_slots
         last = np.zeros((B,), np.int32)
         live = np.zeros((B,), bool)
@@ -465,7 +475,7 @@ class RolloutWorker:
         for seq in self.store.values():
             last[seq.slot] = seq.tokens[-1]
             keys[seq.slot] = seq.key
-        for sid in seq_ids:
+        for sid in requested:
             seq = self.store[sid]
             seq.preempted = False
             live[seq.slot] = True
@@ -487,8 +497,8 @@ class RolloutWorker:
                 break
         emitted = (np.concatenate(parts, axis=0) if parts
                    else np.zeros((0, B), np.int32))    # n_tokens == 0 edge
-        out: dict[int, list[int]] = {}
-        for sid in seq_ids:
+        out: dict[int, list[int]] = {sid: [] for sid in seq_ids}
+        for sid in requested:
             seq = self.store[sid]
             toks = [int(t) for t in emitted[:, seq.slot] if t >= 0]
             out[sid] = toks
@@ -529,6 +539,10 @@ class RolloutWorker:
             "tokens": list(seq.tokens),
             "generated": seq.generated,
             "key": np.asarray(seq.key),
+            # lifecycle flags travel with the lane: a trajectory preempted before a
+            # tool-interval migration must arrive preempted, not active
+            "preempted": seq.preempted,
+            "finished": seq.finished,
             "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
         }
 
@@ -549,7 +563,9 @@ class RolloutWorker:
         if key is None:                                     # foreign package: re-key
             key = np.asarray(jax.random.fold_in(self.base_key, package["seq_id"]))
         seq = Sequence(package["seq_id"], list(package["tokens"]), slot,
-                       np.asarray(key), generated=package["generated"])
+                       np.asarray(key), generated=package["generated"],
+                       preempted=package.get("preempted", False),
+                       finished=package.get("finished", False))
         self.store[package["seq_id"]] = seq
         self.prefix_index.insert(seq.tokens, slot=slot)
 

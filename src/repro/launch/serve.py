@@ -1,7 +1,14 @@
-"""Serving launcher: Heddle-orchestrated batched rollout serving.
+"""Serving launcher: event-driven Heddle rollout over real workers.
+
+Runs the full trajectory-centric runtime (``repro.engine.runtime``) on a seeded
+long-tail agentic workload: real multi-step trajectories (generate → tool call →
+absorb → repeat) across multiple ``RolloutWorker``s, with per-worker scheduler
+queues, preemptive execution, progressive prediction refresh, and tool-interval
+KV migration.
 
 Local (real execution, reduced model):
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --requests 16
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --steps 3 \
+        --scheduler pps [--migration on|off] [--tool-latency 1.0]
 
 Production dry-run (lower + compile serve_step for the pod mesh):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --dry-run \
@@ -14,20 +21,55 @@ import argparse
 import sys
 import time
 
-import numpy as np
+
+def build_runtime(args, cfg, params):
+    """Workload + predictor + controller + workers + runtime for one serve run."""
+    from repro.engine.runtime import (RuntimeConfig, build_workbench,
+                                      make_runtime)
+
+    gsz = max(1, args.group_size)
+    max_steps = args.steps if args.steps > 0 else None
+    batch, predictor = build_workbench(
+        task=args.task, n_prompts=-(-args.requests // gsz), group_size=gsz,
+        seed=args.seed, base_steps=1.5 if max_steps is not None else 3.0,
+        max_steps=max_steps, max_total_tokens=args.max_tokens)
+    batch = batch[:args.requests]
+    rcfg = RuntimeConfig(scheduler=args.scheduler,
+                         migration=args.migration == "on",
+                         max_active=args.max_active, quantum=args.quantum,
+                         tool_latency_scale=args.tool_latency, seed=args.seed)
+    return make_runtime(cfg, params, batch, predictor,
+                        n_workers=args.workers, config=rcfg,
+                        capacity=args.capacity)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--group-size", type=int, default=4,
                     help="GRPO group size: requests per shared prompt (prefix-"
-                         "affine placement keeps a group on one worker so the "
-                         "radix cache implants the shared prompt for siblings)")
+                         "affine placement keeps a group together so the radix "
+                         "cache implants the shared prompt for siblings)")
     ap.add_argument("--workers", type=int, default=2)
-    ap.add_argument("--gen-tokens", type=int, default=24)
-    ap.add_argument("--scheduler", default="pps", choices=["pps", "fcfs", "rr", "sjf"])
+    ap.add_argument("--steps", type=int, default=3,
+                    help="agentic steps per trajectory (plans truncated here; "
+                         "easy samples finish earlier; 0 = no cap, keeping the "
+                         "workload's full step-count tail)")
+    ap.add_argument("--scheduler", default="pps",
+                    choices=["pps", "fcfs", "rr", "sjf"])
+    ap.add_argument("--migration", default="on", choices=["on", "off"],
+                    help="tool-interval KV migration (§5.3)")
+    ap.add_argument("--tool-latency", type=float, default=1.0,
+                    help="scale on the workload's sampled tool latencies")
+    ap.add_argument("--task", default="coding", choices=["coding", "search", "math"])
+    ap.add_argument("--max-active", type=int, default=3,
+                    help="decode-concurrency slots per worker")
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="decode tokens per scheduling quantum")
+    ap.add_argument("--max-tokens", type=int, default=48,
+                    help="longest trajectory's total generated tokens")
+    ap.add_argument("--capacity", type=int, default=160)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k",
@@ -44,73 +86,39 @@ def main(argv=None):
 
     import jax
     from repro.configs import get_config
-    from repro.core.placement import InterferenceModel, place
-    from repro.engine.sampler import SamplerConfig
-    from repro.engine.worker import RolloutWorker
     from repro.models import model as M
 
     cfg = get_config(args.arch).reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    # GRPO-style workload: requests in groups of --group-size share one prompt
-    gsz = max(1, args.group_size)
-    n_groups = -(-args.requests // gsz)
-    group_prompts = [[5 + int(t) for t in rng.integers(0, 100, rng.integers(3, 9))]
-                     for _ in range(n_groups)]
-    prompts = {i: group_prompts[i // gsz] for i in range(args.requests)}
-
-    # trajectory-aware placement of the request *groups* (prefix affinity: the whole
-    # group lands on one worker, so siblings hit the radix cache); predicted group
-    # length ~ group_size * prompt length
-    lengths = [float(len(p)) * 8 * gsz for p in group_prompts]
-    placement = place(lengths, args.workers, InterferenceModel.analytic(0.02))
-    assignment = {}
-    for w, group in enumerate(placement.groups):
-        for gid in group:
-            for rid in range(gid * gsz, min((gid + 1) * gsz, args.requests)):
-                assignment[rid] = w
-
-    # size each worker's slot pool for its assigned requests (pools auto-grow if the
-    # scheduler later routes extra trajectories their way)
-    pool_sizes = [max(2, sum(1 for rid in assignment if assignment[rid] == i))
-                  for i in range(args.workers)]
-    workers = [RolloutWorker(cfg, params, capacity=128, max_slots=pool_sizes[i],
-                             worker_id=i, sampler=SamplerConfig(temperature=0.8),
-                             seed=args.seed)
-               for i in range(args.workers)]
+    runtime = build_runtime(args, cfg, params)
+    controller = runtime.controller
 
     t0 = time.time()
-    for rid, prompt in prompts.items():
-        workers[assignment[rid]].prefill(rid, prompt)
-    by_worker: dict[int, list[int]] = {}
-    for rid, w in assignment.items():
-        by_worker.setdefault(w, []).append(rid)
-    done = 0
-    for w, rids in by_worker.items():
-        out = workers[w].decode(rids, args.gen_tokens)
-        done += sum(len(v) for v in out.values())
-        stats = workers[w].dispatch_stats()
-        print(f"worker {w}: served {len(rids)} requests "
-              f"({sum(len(v) for v in out.values())} tokens), "
-              f"prefix reuse {stats['reused_tokens']}/"
-              f"{stats['reused_tokens'] + stats['prefilled_tokens']} admit tokens, "
-              f"{stats['full_hits']} full + {stats['partial_hits']} partial hits")
+    res = runtime.run()
     dt = time.time() - t0
 
-    # surface measured reuse into the control plane's dispatch stats: this is the
-    # number the simulator's cache model consumes (SimConfig.measured_reuse_rate)
-    from repro.core.controller import HeddleController
-    from repro.core.predictor import ProgressivePredictor
-    from repro.core.resource_manager import WorkerLatencyModel
-    controller = HeddleController(ProgressivePredictor(),
-                                  InterferenceModel.analytic(0.02),
-                                  WorkerLatencyModel(), gpu_budget=args.workers)
-    for w in workers:
-        controller.record_worker_stats(w.worker_id, w.dispatch_stats())
+    for ws in runtime.workers:
+        stats = ws.engine.dispatch_stats()
+        served = sum(1 for t in res.trajectories
+                     if t.worker_id == ws.wid and t.finished)
+        print(f"worker {ws.wid}: finished {served} trajectories, "
+              f"{stats['decode_steps']} decode steps, "
+              f"prefix reuse {stats['reused_tokens']}/"
+              f"{stats['reused_tokens'] + stats['prefilled_tokens']} admit tokens, "
+              f"{stats['retired_lanes']} retired lanes")
+    steps = sum(t.num_steps for t in res.trajectories)
+    multi = sum(1 for t in res.trajectories if t.num_steps > 1)
     rate = controller.measured_reuse_rate
-    print(f"\nserved {args.requests} requests, {done} tokens in {dt:.1f}s "
-          f"({done/dt:.1f} tok/s on CPU); measured prefix reuse rate "
-          f"{0.0 if rate is None else rate:.2f}")
+    print(f"\nserved {len(res.trajectories)} trajectories "
+          f"({steps} agentic steps, {multi} multi-step) across "
+          f"{len(runtime.workers)} workers: {res.total_tokens} real tokens "
+          f"in {dt:.1f}s wall")
+    print(f"virtual makespan {res.makespan:.2f}s "
+          f"({res.throughput:.1f} tok/s), queue delay mean {res.queue_delay_mean:.3f}s "
+          f"p99 {res.queue_delay_p99:.3f}s")
+    print(f"preemptions {res.preemptions}, tool-interval migrations "
+          f"{res.migrations}, tool invocations {runtime.env.invocations}, "
+          f"measured prefix reuse rate {0.0 if rate is None else rate:.2f}")
     return 0
 
 

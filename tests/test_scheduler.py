@@ -68,6 +68,40 @@ def test_pps_preemption_picks_lowest_priority_victim():
     assert s2.preempt_victim(active) is None
 
 
+def test_preemption_floor_blocks_cold_predictor_thrash():
+    """Regression: with a cold predictor every priority is 0 and the purely
+    multiplicative hysteresis is vacuous (top > 0 * margin always preempts),
+    causing eviction thrash.  The additive floor requires a real priority gap."""
+    s = make_scheduler("pps")
+    active = [_traj(0), _traj(0)]
+    for t in active:
+        t.priority = t.predicted_total
+    s.submit(_traj(0), 0.0)                         # cold incoming: priority 0
+    assert s.preempt_victim(active) is None         # 0 > 0 + floor is false
+    # still no eviction below the floor...
+    s2 = make_scheduler("pps")
+    s2.submit(_traj(s2.preemption_floor * 0.5), 0.0)
+    assert s2.preempt_victim(active) is None
+    # ...but a clear gap preempts
+    s3 = make_scheduler("pps")
+    s3.submit(_traj(s3.preemption_floor + 1.0), 0.0)
+    assert s3.preempt_victim(active) is active[0]
+
+
+def test_preemption_no_thrash_on_equal_priorities():
+    """Two equal-priority requests must never evict each other back and forth."""
+    s = make_scheduler("pps")
+    a, b = _traj(100), _traj(100)
+    a.priority = a.predicted_total
+    s.submit(b, 0.0)
+    assert s.preempt_victim([a]) is None            # equal: margin+floor hold
+    # swap roles: still no eviction, so no ping-pong cycle exists
+    s2 = make_scheduler("pps")
+    b.priority = b.predicted_total
+    s2.submit(a, 0.0)
+    assert s2.preempt_victim([b]) is None
+
+
 def test_resubmit_updates_priority_without_duplication():
     s = make_scheduler("pps")
     t = _traj(10)

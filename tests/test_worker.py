@@ -84,6 +84,56 @@ def test_migration_preserves_decoding_state(setup):
     assert got == want
 
 
+def test_decode_skips_finished_sequences(setup):
+    """Regression: decode() used to resume a sequence whose ``finished`` flag was
+    already set and append tokens past its stop token; a finished sequence must
+    contribute an empty stream and stay frozen."""
+    cfg, params = setup
+    probe = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                          sampler=SamplerConfig(temperature=0.0))
+    probe.prefill(1, [5, 7, 9, 11])
+    stop = probe.decode([1], 3)[1][1]             # greedy token at step 2 = stop
+    w = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                      sampler=SamplerConfig(temperature=0.0))
+    w.prefill(1, [5, 7, 9, 11])
+    first = w.decode([1], 5, stop_token=stop)
+    assert first[1][-1] == stop and w.store[1].finished
+    frozen = list(w.store[1].tokens)
+    again = w.decode([1], 4, stop_token=stop)     # scheduler re-requests it
+    assert again == {1: []}
+    assert w.store[1].tokens == frozen            # nothing decoded past the stop
+    assert w.store[1].finished
+
+
+def test_migration_carries_preempted_flag(setup):
+    """Regression: migrate_out dropped ``preempted`` — a preempted trajectory
+    migrated during a tool call arrived at the destination as active.  The flag
+    must survive the transfer, and preempt -> migrate -> resume must decode
+    exactly what a preempt -> resume on one worker would have."""
+    cfg, params = setup
+    w0 = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                       sampler=SamplerConfig(temperature=0.0))
+    w1 = RolloutWorker(cfg, params, capacity=64, worker_id=1,
+                       sampler=SamplerConfig(temperature=0.0))
+    w0.prefill(1, [5, 7, 9, 11])
+    w0.decode([1], 2)
+    w0.preempt(1)
+    pkg = w0.migrate_out(1)
+    assert pkg["preempted"] is True and pkg["finished"] is False
+    w1.migrate_in(pkg)
+    assert w1.store[1].preempted                  # arrives preempted, not active
+    # reference: preempt/resume without migration
+    ref = RolloutWorker(cfg, params, capacity=64, worker_id=0,
+                        sampler=SamplerConfig(temperature=0.0))
+    ref.prefill(2, [5, 7, 9, 11])
+    ref.decode([2], 2)
+    ref.preempt(2)
+    got = w1.decode([1], 3)[1]                    # resume on the destination
+    want = ref.decode([2], 3)[2]
+    assert got == want
+    assert not w1.store[1].preempted
+
+
 def test_preemption_persists_cache(setup):
     cfg, params = setup
     w = RolloutWorker(cfg, params, capacity=64, worker_id=0,
