@@ -11,8 +11,6 @@ import copy
 import time
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.core.predictor import ProgressivePredictor
 from repro.engine.simulator import SimConfig, SimResult, RolloutSimulator
 from repro.engine.workload import WorkloadConfig, generate, replay_finished

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 
 from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, improvement_hint, roofline_row
 

@@ -21,8 +21,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
-import os
 
 from repro.configs import get_config
 from repro.models.config import INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig

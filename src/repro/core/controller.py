@@ -18,14 +18,14 @@ Baseline policies reproduce the paper's comparison systems on identical substrat
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Protocol, Sequence
 
 import numpy as np
 
 from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
                                   TransmissionScheduler)
-from repro.core.placement import InterferenceModel, place
+from repro.core.placement import InterferenceModel
 from repro.core.predictor import ProgressivePredictor
 from repro.core.resource_manager import (WorkerLatencyModel, homogeneous_allocation,
                                          sort_initialized_sa)
@@ -152,6 +152,43 @@ class HeddleController:
         if total == 0:
             return None
         return reused / total
+
+    def calibration_observations(self) -> list[tuple[int, float, float]]:
+        """Measured ``(mp, mean_batch, per_step_seconds)`` per reporting worker.
+
+        Derived from the engine's decode telemetry (warm, compile-free calls
+        only): ``decode_wall_s / decode_timed_steps`` is the observed per-STEP
+        decode time at the worker's declared MP degree — the quantity the
+        latency model prices, since the full-pool masked kernel costs the same
+        whether 1 or 8 lanes are live and one step advances every live lane one
+        token.  ``decode_timed_lane_steps / decode_timed_steps`` is the mean
+        live batch the model's comm/interference term regresses on.  Feeds
+        ``WorkerLatencyModel.fit`` (§6 calibration — t1/overlap from
+        observations instead of Fig. 7 constants).
+        """
+        obs: list[tuple[int, float, float]] = []
+        for stats in self.worker_stats.values():
+            steps = stats.get("decode_timed_steps", 0)
+            lane_steps = stats.get("decode_timed_lane_steps", 0)
+            wall = stats.get("decode_wall_s", 0.0)
+            if steps > 0 and wall > 0.0:
+                obs.append((int(stats.get("mp", 1)),
+                            lane_steps / steps, wall / steps))
+        return obs
+
+    def calibrate_latency(self, observations=None) -> Optional[WorkerLatencyModel]:
+        """Refit the worker latency model from measured decode timing.
+
+        Swaps ``self.latency`` so the next provisioning / placement round prices
+        MP degrees from observed behavior.  Returns the fitted model, or None
+        when no worker has reported timing yet (model unchanged)."""
+        obs = (observations if observations is not None
+               else self.calibration_observations())
+        if not obs:
+            return None
+        self.latency = WorkerLatencyModel.fit(
+            obs, comm_batch_coef=self.latency.comm_batch_coef)
+        return self.latency
 
     # ------------------------------------------------------------ provisioning (how)
     def provision(self, trajectories: Sequence[Trajectory]) -> list[int]:

@@ -53,6 +53,57 @@ class WorkerLatencyModel:
         return np.asarray([self.base_token_time(d, batch) for d in degrees],
                           dtype=np.float64)
 
+    @classmethod
+    def fit(cls, observations: Sequence[tuple[int, float, float]],
+            comm_batch_coef: float = 0.087) -> "WorkerLatencyModel":
+        """Least-squares ``(t1, overlap)`` from measured per-worker decode timing.
+
+        ``observations`` are ``(mp, batch, per_step_seconds)`` samples — the
+        engine's warm-call ``dispatch_stats`` feed (``decode_wall_s /
+        decode_timed_steps`` at the worker's declared MP degree and mean live
+        batch; one masked full-pool step advances every live lane one token, so
+        per-step time is the per-sequence token time the control plane prices).
+        The model is linear in ``u = t1`` and ``v = t1 * overlap``:
+
+            t(mp, b) = u / mp + v * (c(mp, b) - 1 / mp),
+            c(mp, b) = 1 + comm_batch_coef * max(b - 1, 0)  if mp > 1 else 1,
+
+        so ordinary least squares recovers both, replacing the Fig. 7 constants
+        with observed behavior.  With a single distinct MP degree the system is
+        degenerate; ``overlap`` keeps its prior and only ``t1`` is re-scaled to
+        match the observed mean.  Fitted values are clamped to the physical
+        range (t1 > 0, 0 <= overlap <= 0.95).
+        """
+        obs = [(int(mp), float(b), float(t)) for mp, b, t in observations
+               if t > 0.0 and int(mp) >= 1]
+        if not obs:
+            raise ValueError("WorkerLatencyModel.fit needs at least one "
+                             "positive-time observation")
+
+        def c_term(mp: int, b: float) -> float:
+            return 1.0 + comm_batch_coef * max(b - 1.0, 0.0) if mp > 1 else 1.0
+
+        prior = cls(comm_batch_coef=comm_batch_coef)
+        if len({mp for mp, _, _ in obs}) == 1:
+            # shape is per-observation: samples at different batches carry
+            # different comm terms, so divide each out before averaging
+            ratios = [t / ((1.0 - prior.overlap) / mp
+                           + prior.overlap * c_term(mp, b))
+                      for mp, b, t in obs]
+            return cls(t1=max(float(np.mean(ratios)), 1e-12),
+                       overlap=prior.overlap,
+                       comm_batch_coef=comm_batch_coef)
+        design = np.asarray([[1.0 / mp, c_term(mp, b) - 1.0 / mp]
+                             for mp, b, _ in obs], dtype=np.float64)
+        target = np.asarray([t for _, _, t in obs], dtype=np.float64)
+        (u, v), *_ = np.linalg.lstsq(design, target, rcond=None)
+        if u <= 0.0:                     # pathological sample: keep prior shape
+            return cls(t1=max(float(target.mean()), 1e-12),
+                       overlap=prior.overlap, comm_batch_coef=comm_batch_coef)
+        overlap = float(np.clip(v / u, 0.0, 0.95))
+        return cls(t1=float(u), overlap=overlap,
+                   comm_batch_coef=comm_batch_coef)
+
 
 @dataclass
 class AllocationResult:

@@ -48,6 +48,7 @@ from repro.core.controller import HeddleController
 from repro.core.migration import MigrationRequest, migration_time
 from repro.core.scheduler import make_scheduler
 from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
+from repro.engine.fleet import FleetSpec, RolloutFleet
 from repro.engine.worker import RolloutWorker
 from repro.engine.workload import TrajectoryPlan
 
@@ -87,6 +88,7 @@ class RuntimeResult:
     worker_stats: dict[int, dict] = field(default_factory=dict)
     wall_time: float = 0.0               # real seconds spent in the data plane
     events: int = 0
+    degrees: list[int] = field(default_factory=list)  # fleet MP degrees (§6)
 
 
 @dataclass
@@ -166,7 +168,7 @@ def miniaturize(trajectories: list[Trajectory], *, max_steps: int | None = None,
         touts = [max(1, round(o * o_scale)) for o in p.tool_output_tokens[:n]]
         fail = list(p.tool_failed[:n])
         fail[-1] = False                 # terminal step's tool ends the episode
-        lat = [l * g_scale for l in p.tool_latency[:n]]
+        lat = [x * g_scale for x in p.tool_latency[:n]]
         t.payload = TrajectoryPlan(gen, lat, fail, touts)
         t.prompt_tokens = max(4, round(t.prompt_tokens * p_scale))
         t.context_tokens = t.prompt_tokens
@@ -221,10 +223,18 @@ def build_workbench(task: str = "coding", n_prompts: int = 6, group_size: int = 
 
 def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                  n_workers: int = 2, config: RuntimeConfig = RuntimeConfig(), *,
-                 capacity: int | None = None, migration_load_gap: int = 1,
-                 migration_cooldown_steps: int = 1, rank_hysteresis: float = 0.2,
-                 temperature: float = 0.8) -> "RolloutRuntime":
-    """Wire controller + real workers + tool environment into a RolloutRuntime.
+                 fleet: FleetSpec | None = None, capacity: int | None = None,
+                 migration_load_gap: int = 1, migration_cooldown_steps: int = 1,
+                 rank_hysteresis: float = 0.2, temperature: float = 0.8,
+                 devices=None) -> "RolloutRuntime":
+    """Wire controller + real worker fleet + tool environment into a RolloutRuntime.
+
+    ``fleet`` is the per-worker MP degree spec (§6); omitted, it defaults to a
+    homogeneous mp=1 fleet of ``n_workers`` — the pre-heterogeneous behavior.
+    A non-trivial spec builds each worker on its own carved sub-mesh (when the
+    device set allows) and prices its virtual decode clock through the
+    controller's ``WorkerLatencyModel``, so long-tail partitions land on — and
+    actually decode faster on — the high-MP workers.
 
     Controller gates default to small-cluster values (load gap 1, short
     cooldown): at a few workers and a few dozen live trajectories, the
@@ -234,25 +244,26 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
     from repro.core.placement import InterferenceModel
     from repro.core.resource_manager import WorkerLatencyModel
     from repro.engine.sampler import SamplerConfig
+    spec = fleet if fleet is not None else FleetSpec.homogeneous(n_workers)
     controller = HeddleController(
         predictor, InterferenceModel.analytic(config.kv_weight_ratio),
-        WorkerLatencyModel(t1=config.token_time), gpu_budget=n_workers,
+        WorkerLatencyModel(t1=config.token_time), gpu_budget=spec.budget,
         config=HeddleConfig(scheduler=config.scheduler, adaptive_resources=False,
                             migration=config.migration,
                             migration_load_gap=migration_load_gap,
                             migration_cooldown_steps=migration_cooldown_steps,
                             rank_hysteresis=rank_hysteresis),
-        max_workers=n_workers)
-    controller.degrees = [1] * n_workers
+        max_workers=spec.n_workers)
     cap = max(capacity or 0, required_capacity(batch))
-    workers = [RolloutWorker(cfg, params, capacity=cap, max_slots=len(batch),
-                             worker_id=i,
+    if max(spec.degrees) > 1:            # KV capacity shards evenly on the model axis
+        cap = -(-cap // max(spec.degrees)) * max(spec.degrees)
+    fleet_obj = RolloutFleet(cfg, params, spec, capacity=cap,
+                             max_slots=len(batch),
                              sampler=SamplerConfig(temperature=temperature),
-                             seed=config.seed)
-               for i in range(n_workers)]
+                             seed=config.seed, devices=devices)
     env = ToolEnvironment(seed=config.seed,
                           latency_scale=config.tool_latency_scale)
-    return RolloutRuntime(workers, controller, batch, env, config)
+    return RolloutRuntime(fleet_obj, controller, batch, env, config)
 
 
 # ---------------------------------------------------------------- runtime
@@ -260,26 +271,37 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
 class _WorkerState:
     """One rollout worker's runtime view: engine + queue + active decode set."""
 
-    def __init__(self, wid: int, engine: RolloutWorker, scheduler_name: str):
+    def __init__(self, wid: int, engine: RolloutWorker, scheduler_name: str,
+                 token_time: float = 0.02):
         self.wid = wid
         self.engine = engine
         self.scheduler = make_scheduler(scheduler_name)
         self.active: set[int] = set()    # traj_ids currently decoding
         self.clock = 0.0                 # this worker's virtual time frontier
         self.sleeping = True             # no worker_ready event in flight
+        self.token_time = token_time     # virtual s/token at batch 1 AT THIS MP
 
 
 class RolloutRuntime:
     """Drives real RolloutWorkers through full agentic trajectories, event-driven.
 
-    The caller supplies constructed workers (uniform ``capacity`` — migration
-    moves lanes between pools), a ``HeddleController`` with a fitted predictor,
-    the trajectory batch (``engine.workload`` plans, typically ``miniaturize``d),
-    and a ``ToolEnvironment``.  ``run()`` executes the batch to completion and
-    returns deterministic end-to-end metrics.
+    The caller supplies the worker fleet — a ``RolloutFleet`` (heterogeneous MP,
+    reconfigurable between steps) or a bare worker list (uniform ``capacity`` —
+    migration moves lanes between pools) — a ``HeddleController`` with a fitted
+    predictor, the trajectory batch (``engine.workload`` plans, typically
+    ``miniaturize``d), and a ``ToolEnvironment``.  ``run()`` executes the batch
+    to completion and returns deterministic end-to-end metrics.
+
+    The fleet's per-worker MP degrees are the **single source of truth**: the
+    controller's ``degrees`` vector is synced from them here (a pre-set
+    conflicting stub raises), and each worker's virtual decode clock is priced
+    at ``controller.latency.base_token_time(mp)`` — normalized so an mp=1 worker
+    costs exactly ``config.token_time`` per token.
     """
 
-    def __init__(self, workers: list[RolloutWorker], controller: HeddleController,
+    def __init__(self,
+                 workers: list[RolloutWorker] | RolloutFleet,
+                 controller: HeddleController,
                  trajectories: list[Trajectory], tool_env: ToolEnvironment,
                  config: RuntimeConfig = RuntimeConfig(),
                  prompts: dict[int, list[int]] | None = None):
@@ -290,17 +312,29 @@ class RolloutRuntime:
         self.by_id = {t.traj_id: t for t in self.trajs}
         self.prompts = prompts if prompts is not None \
             else synth_prompts(self.trajs, seed=config.seed)
-        cap = min(w.capacity for w in workers)
+        if isinstance(workers, RolloutFleet):
+            self.fleet: RolloutFleet | None = workers
+            engines = workers.workers
+        else:
+            self.fleet = None
+            engines = list(workers)
+        # one authority for MP degrees: the engines themselves (FleetSpec
+        # validates the §6.1 descending sort-and-zip order).  A controller
+        # arriving with a different pre-set vector is a stale stub — refuse to
+        # let it silently mask the real allocation.
+        self.spec = FleetSpec(tuple(w.mp for w in engines))
+        if controller.degrees and list(controller.degrees) != list(self.spec.degrees):
+            raise ValueError(
+                f"controller.degrees {controller.degrees} conflicts with the "
+                f"fleet's MP degrees {list(self.spec.degrees)}; the fleet spec "
+                f"is the single source of truth — drop the manual assignment")
+        controller.degrees = list(self.spec.degrees)
+        cap = min(w.capacity for w in engines)
         need = required_capacity(self.trajs)
         if need > cap:
             raise ValueError(f"worker capacity {cap} < max trajectory context "
                              f"{need}; raise capacity or miniaturize harder")
-        self.workers = [_WorkerState(w.worker_id, w, config.scheduler)
-                        for w in workers]
-        for ws in self.workers:
-            if hasattr(ws.scheduler, "preemption_margin"):
-                ws.scheduler.preemption_margin = config.preemption_margin
-                ws.scheduler.preemption_floor = config.preemption_floor
+        self.workers = self._worker_states(engines)
         self.interference = controller.interference
         # runtime lifecycle state
         self.step_remaining: dict[int, int] = {}     # mid-step decode budget
@@ -313,6 +347,30 @@ class RolloutRuntime:
         self.wall = 0.0
         self._evq: list[tuple[float, int, str, int]] = []
         self._seq = itertools.count()
+
+    # ------------------------------------------------------------ fleet pricing
+    def _worker_states(self, engines: list[RolloutWorker]) -> list[_WorkerState]:
+        """Runtime views (queue + clock + pricing) for a worker set — the ONE
+        place scheduler knobs are wired, so reconfigured fleets never drift
+        from freshly constructed ones."""
+        states = [
+            _WorkerState(w.worker_id, w, self.cfg.scheduler,
+                         token_time=self._token_time(w.mp))
+            for w in engines]
+        for ws in states:
+            if hasattr(ws.scheduler, "preemption_margin"):
+                ws.scheduler.preemption_margin = self.cfg.preemption_margin
+                ws.scheduler.preemption_floor = self.cfg.preemption_floor
+        return states
+
+    def _token_time(self, mp: int) -> float:
+        """Virtual s/token at batch 1 for MP degree ``mp``.
+
+        Scaled through the controller's latency model and normalized so mp=1
+        costs exactly ``config.token_time`` — a homogeneous mp=1 fleet prices
+        identically to the pre-heterogeneous runtime."""
+        lat = self.controller.latency
+        return self.cfg.token_time * lat.base_token_time(mp) / lat.base_token_time(1)
 
     # ------------------------------------------------------------ event plumbing
     def _push(self, t: float, kind: str, payload: int) -> None:
@@ -378,7 +436,7 @@ class RolloutRuntime:
         t0 = time.perf_counter()
         out = ws.engine.decode(ids, q)               # REAL tokens into real lanes
         self.wall += time.perf_counter() - t0
-        dt = q * self.cfg.token_time * float(self.interference(len(ids)))
+        dt = q * ws.token_time * float(self.interference(len(ids)))
         end = now + dt
         ws.clock = end
         for tid in ids:
@@ -494,8 +552,14 @@ class RolloutRuntime:
             t.predicted_remaining = self.controller.predictor.predict(t)
             t.priority = t.predicted_total
             t.submit_time = 0.0
-        if not self.controller.degrees:
-            self.controller.degrees = [1] * len(self.workers)
+        # the fleet spec was synced to the controller at construction; anything
+        # that mutated it since (a stale [1]*n stub, a partial reconfigure)
+        # would silently misprice placement — fail loudly instead
+        if list(self.controller.degrees) != list(self.spec.degrees):
+            raise ValueError(
+                f"controller.degrees {self.controller.degrees} drifted from the "
+                f"fleet spec {list(self.spec.degrees)} between construction and "
+                f"run(); reconfigure() is the only sanctioned mutation path")
         self.controller.initial_placement(self.trajs)
         # admission: prefill each worker's group up front (lanes are memory; the
         # scheduler gates decode *compute*).  Sibling-adjacent order maximizes
@@ -506,7 +570,7 @@ class RolloutRuntime:
             t0 = time.perf_counter()
             for t in mine:
                 ws.engine.prefill(t.traj_id, self.prompts[t.traj_id])
-                ws.clock += len(self.prompts[t.traj_id]) * cfg.token_time \
+                ws.clock += len(self.prompts[t.traj_id]) * ws.token_time \
                     / cfg.prefill_speedup
             self.wall += time.perf_counter() - t0
         for t in self.trajs:
@@ -544,4 +608,49 @@ class RolloutRuntime:
             worker_stats=dict(self.controller.worker_stats),
             wall_time=time.perf_counter() - wall0,
             events=guard,
+            degrees=list(self.spec.degrees),
         )
+
+    # ------------------------------------------------------------ §6 feedback loop
+    def calibrate(self):
+        """Refit the controller's WorkerLatencyModel from measured decode timing.
+
+        Uses the per-worker warm-call decode timing the run streamed through
+        ``record_worker_stats`` (``decode_wall_s / decode_timed_steps`` per-step
+        samples), so the next provisioning round prices MP degrees from
+        observations instead of Fig. 7 constants.  Returns the fitted model
+        (None if no timing was recorded)."""
+        return self.controller.calibrate_latency()
+
+    def reconfigure(self, spec: FleetSpec | None = None, *,
+                    calibrate: bool = True) -> dict:
+        """Between-steps reconfiguration: calibrate → provision → split/merge.
+
+        With ``spec=None`` the controller re-runs Algorithm 2 over this batch's
+        trajectories (now carrying observed step histories) under the calibrated
+        latency model and the fleet executes the resulting split/merge moves
+        (``RolloutFleet.reconfigure``: reuse unchanged slots, re-shard changed
+        ones, migrate residents across MP degrees).  Only legal between runs —
+        the event queue must be drained.  Returns the fleet's move report.
+        """
+        if self.fleet is None:
+            raise ValueError("runtime was built from a bare worker list; "
+                             "construct it with a RolloutFleet to reconfigure")
+        if self._evq:
+            raise RuntimeError("reconfigure() during a live run: drain the "
+                               "event queue first (call between steps)")
+        if calibrate:
+            self.controller.calibrate_latency()
+        if spec is None:
+            was_adaptive = self.controller.config.adaptive_resources
+            self.controller.config.adaptive_resources = True
+            try:
+                spec = FleetSpec.from_degrees(
+                    self.controller.provision(self.trajs))
+            finally:
+                self.controller.config.adaptive_resources = was_adaptive
+        report = self.fleet.reconfigure(spec)
+        self.spec = self.fleet.spec
+        self.controller.degrees = list(self.spec.degrees)
+        self.workers = self._worker_states(self.fleet.workers)
+        return report

@@ -30,6 +30,7 @@ concat/slice engine as the parity reference; see docs/engine.md for invariants.
 
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
@@ -39,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.distributed.sharding import (axis_rules, cache_shardings,
+                                        param_shardings)
 from repro.engine.sampler import SamplerConfig, sample_slots
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -189,15 +192,22 @@ class PrefixCacheIndex:
 
 # ---------------------------------------------------------------- jitted kernels
 # Module-level jits keyed on (cfg, shapes): workers sharing a config share compiles.
+# Kernels whose model code emits sharding constraints (``sharding.shard``) also key
+# on the worker's ``mesh`` as a *static* argument: pjit caches the traced jaxpr by
+# avals alone, so a constraint traced under worker A's mesh would otherwise be
+# replayed — with A's device set baked in — for worker B's differently-meshed
+# arguments.  ``axis_rules`` runs at trace time, once per (cfg, shapes, mesh).
 
-@partial(jax.jit, static_argnames=("cfg", "capacity"), donate_argnums=(2,))
-def _admit(cfg: ModelConfig, params, pool, tokens, slot, capacity: int):
+@partial(jax.jit, static_argnames=("cfg", "capacity", "mesh"), donate_argnums=(2,))
+def _admit(cfg: ModelConfig, params, pool, tokens, slot, capacity: int, mesh=None):
     """Full-sequence prefill fallback: one compile per distinct prompt length.
 
     Used only for configs ``supports_chunked_prefill`` rejects (MoE, sliding-window,
     cross-attention); everything else admits through the chunked path below."""
-    _, _, lane = M.forward_full(cfg, params, {"tokens": tokens}, capacity=capacity)
-    return M.write_slot(pool, lane, slot)
+    with axis_rules(mesh):
+        _, _, lane = M.forward_full(cfg, params, {"tokens": tokens},
+                                    capacity=capacity)
+        return M.write_slot(pool, lane, slot)
 
 
 @partial(jax.jit, static_argnames=("cfg", "batch", "capacity"))
@@ -206,13 +216,14 @@ def _fresh_lane(cfg: ModelConfig, batch: int, capacity: int):
     return M.init_cache(cfg, None, batch, capacity)
 
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
-def _prefill_chunk(cfg: ModelConfig, params, lane, tokens, length):
+@partial(jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(2,))
+def _prefill_chunk(cfg: ModelConfig, params, lane, tokens, length, mesh=None):
     """One fixed-shape (1, C) chunk into a batch-1 lane at its current ``pos``.
 
     ``length`` is traced, so ONE compile serves every offset and tail length —
     admission cost is bounded by chunk count, not by distinct prompt lengths."""
-    return M.prefill_chunk(cfg, params, lane, tokens, length)
+    with axis_rules(mesh):
+        return M.prefill_chunk(cfg, params, lane, tokens, length)
 
 
 @partial(jax.jit, donate_argnums=(2,))
@@ -234,8 +245,8 @@ def _implant(pool, lane, slot):
     return M.write_slot(pool, lane, slot)
 
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
-def _extend_slot(cfg: ModelConfig, params, pool, tool_tokens, slot):
+@partial(jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(2,))
+def _extend_slot(cfg: ModelConfig, params, pool, tool_tokens, slot, mesh=None):
     """Teacher-force ``tool_tokens`` (L,) into lane ``slot`` only (active mask)."""
     B = pool["pos"].shape[0]
     active = jnp.arange(B) == slot
@@ -245,14 +256,17 @@ def _extend_slot(cfg: ModelConfig, params, pool, tool_tokens, slot):
                                 jnp.broadcast_to(tok, (B,))[:, None], active=active)
         return pool, None
 
-    pool, _ = lax.scan(body, pool, tool_tokens)
+    with axis_rules(mesh):
+        pool, _ = lax.scan(body, pool, tool_tokens)
     return pool
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_tokens", "stop_token", "sampler"),
+@partial(jax.jit,
+         static_argnames=("cfg", "n_tokens", "stop_token", "sampler", "mesh"),
          donate_argnums=(2,))
 def _decode_loop(cfg: ModelConfig, params, pool, last, live, keys,
-                 n_tokens: int, stop_token: int | None, sampler: SamplerConfig):
+                 n_tokens: int, stop_token: int | None, sampler: SamplerConfig,
+                 mesh=None):
     """The persistent decode loop: ``n_tokens`` masked steps over the whole pool.
 
     last: (B,) int32 last context token per lane; live: (B,) bool active mask;
@@ -270,8 +284,9 @@ def _decode_loop(cfg: ModelConfig, params, pool, last, live, keys,
             live = live & (toks != stop_token)
         return (pool, last, live), toks
 
-    (pool, last, live), emitted = lax.scan(body, (pool, last, live), None,
-                                           length=n_tokens)
+    with axis_rules(mesh):
+        (pool, last, live), emitted = lax.scan(body, (pool, last, live), None,
+                                               length=n_tokens)
     return pool, last, live, emitted
 
 
@@ -312,15 +327,26 @@ class RolloutWorker:
                  chunk_size: int = 32, prefix_reuse: bool = True,
                  use_chunked: bool | None = None,
                  retired_kv_bytes: int | None = None,
-                 prefix_index_nodes: int = 65_536):
+                 prefix_index_nodes: int = 65_536,
+                 mesh=None, mp: int = 1):
         self.cfg = cfg
-        self.params = params
         self.capacity = capacity
         self.max_slots = max_slots
         self.worker_id = worker_id
         self.sampler = sampler
+        # model parallelism: `mp` is the worker's declared MP degree (drives the
+        # control plane's latency model); `mesh` is its physical realization — a
+        # ("data", "model") sub-mesh over `mp` devices.  When the device set can't
+        # host the mesh (un-forced CPU), mesh is None and the worker runs the
+        # identical un-meshed code path (sharding.shard() is the identity).
+        self.mp = max(int(mp), 1)
+        self.mesh = mesh
         self.base_key = jax.random.PRNGKey(seed + worker_id)
-        self.pool = M.init_cache(cfg, params, max_slots, capacity)
+        if mesh is not None:
+            self.params = jax.device_put(params, param_shardings(params, mesh))
+        else:
+            self.params = params
+        self.pool = self._place_cache(M.init_cache(cfg, None, max_slots, capacity))
         self.store: dict[int, Sequence] = {}       # resident sequences (incl. preempted)
         self.chunk_size = chunk_size
         self._chunked = ((use_chunked if use_chunked is not None else True)
@@ -342,6 +368,40 @@ class RolloutWorker:
         self.prefilled_tokens = 0                  # admission tokens actually computed
         self.absorbed_tokens = 0                   # tool tokens teacher-forced (extend)
         self.prefill_dispatches = 0                # chunk kernel launches
+        # measured decode timing (feeds WorkerLatencyModel calibration, §6).
+        # Only WARM calls are timed — a call that grew the jit cache spent
+        # seconds compiling, and meshed workers pay per-mesh compiles that
+        # un-meshed ones share, so compile-polluted samples would make mp>1
+        # look slower than it is.  wall_s / timed_steps is the observed
+        # per-STEP decode time (the full-pool masked kernel's cost is
+        # batch-independent; one step advances every live lane one token), and
+        # timed_lane_steps / timed_steps is the mean live batch the model's
+        # comm/interference term regresses on.
+        self.decode_wall_s = 0.0
+        self.decode_timed_steps = 0
+        self.decode_timed_lane_steps = 0
+        self.decode_calls = 0
+
+    def _place_cache(self, cache):
+        """Place a cache pytree on this worker's sub-mesh (identity un-meshed).
+
+        THE one path for cache placement: mixing a default-device-committed
+        cache with sharded params/pool in one jit is rejected (committed arrays
+        on disjoint device sets), so every cache that enters the worker —
+        construction, fresh lanes, pool growth, migration ingress — funnels
+        through here."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, cache_shardings(cache, self.mesh))
+
+    def _new_lane(self):
+        """Empty batch-1 lane, placed on this worker's mesh when it has one.
+
+        The jitted ``_fresh_lane`` commits its output to the default device,
+        which is only safe when the worker is un-meshed (see _place_cache)."""
+        if self.mesh is None:
+            return _fresh_lane(self.cfg, 1, self.capacity)
+        return self._place_cache(M.init_cache(self.cfg, None, 1, self.capacity))
 
     # ------------------------------------------------------------ slot bookkeeping
     def _alloc_slot(self) -> int:
@@ -359,8 +419,10 @@ class RolloutWorker:
             self.prefix_index.invalidate(slot)
             return slot
         slot = self.max_slots
-        fresh = M.init_cache(self.cfg, self.params, self.max_slots, self.capacity)
-        self.pool = M.concat_pools(self.pool, fresh)
+        fresh = self._place_cache(
+            M.init_cache(self.cfg, None, self.max_slots, self.capacity))
+        # re-pin after the eager concat, which drops the sharding
+        self.pool = self._place_cache(M.concat_pools(self.pool, fresh))
         self.max_slots *= 2
         self.pool_grows += 1
         self.prefix_index.invalidate(slot)
@@ -391,10 +453,10 @@ class RolloutWorker:
         if not self._chunked:
             arr = jnp.asarray(tokens, jnp.int32)[None]
             self.pool = _admit(self.cfg, self.params, self.pool, arr, slot,
-                               self.capacity)
+                               self.capacity, mesh=self.mesh)
             self.prefilled_tokens += S
         else:
-            lane = _fresh_lane(self.cfg, 1, self.capacity)
+            lane = self._new_lane()
             if src is not None and reuse_n > 0:
                 if src in self.retired:
                     self.retired.move_to_end(src)         # LRU touch
@@ -417,7 +479,7 @@ class RolloutWorker:
             buf = np.zeros((1, C), np.int32)
             buf[0, :step] = tokens[off:off + step]
             lane = _prefill_chunk(self.cfg, self.params, lane, jnp.asarray(buf),
-                                  jnp.asarray(step, jnp.int32))
+                                  jnp.asarray(step, jnp.int32), mesh=self.mesh)
             off += step
             self.prefill_dispatches += 1
         return lane
@@ -445,7 +507,8 @@ class RolloutWorker:
         ``benchmarks/bench_prefill.py`` measures the chunked path against."""
         seq = self.store[seq_id]
         arr = jnp.asarray(tool_tokens, jnp.int32)
-        self.pool = _extend_slot(self.cfg, self.params, self.pool, arr, seq.slot)
+        self.pool = _extend_slot(self.cfg, self.params, self.pool, arr, seq.slot,
+                                 mesh=self.mesh)
         self.absorbed_tokens += len(tool_tokens)
         seq.tokens.extend(int(t) for t in tool_tokens)
         self.prefix_index.insert(seq.tokens, slot=seq.slot)
@@ -485,16 +548,34 @@ class RolloutWorker:
         chunk = n_tokens if stop_token is None else _DECODE_CHUNK
         parts = []
         remaining = n_tokens
+        ran = 0
+        lane_steps = 0
+        cache0 = _decode_loop._cache_size()
+        t0 = time.perf_counter()
         while remaining > 0:
             step = min(chunk, remaining)
             self.pool, last, live, em = _decode_loop(
                 self.cfg, self.params, self.pool, last, live, keys,
-                step, stop_token, self.sampler)
+                step, stop_token, self.sampler, mesh=self.mesh)
             parts.append(np.asarray(em))                    # (step, B)
             remaining -= step
+            ran += step
             self.decode_steps += step
-            if remaining > 0 and not bool(np.asarray(live).any()):
-                break
+            if stop_token is None:                          # nothing stops early
+                lane_steps += step * len(requested)
+            else:
+                # live batch after the chunk: lanes stopping mid-call must not
+                # keep inflating the calibration's mean-batch regressor
+                n_live = int(np.asarray(live).sum())
+                lane_steps += step * n_live
+                if remaining > 0 and n_live == 0:
+                    break
+        wall = time.perf_counter() - t0
+        if _decode_loop._cache_size() == cache0:            # warm: no compile inside
+            self.decode_wall_s += wall
+            self.decode_timed_steps += ran
+            self.decode_timed_lane_steps += lane_steps
+        self.decode_calls += 1
         emitted = (np.concatenate(parts, axis=0) if parts
                    else np.zeros((0, B), np.int32))    # n_tokens == 0 edge
         out: dict[int, list[int]] = {sid: [] for sid in seq_ids}
@@ -547,7 +628,12 @@ class RolloutWorker:
         }
 
     def migrate_in(self, package: dict) -> None:
-        """Implant a migrated lane into a free slot (capacities must match)."""
+        """Implant a migrated lane into a free slot (capacities must match).
+
+        The package's cache is host-resident (``migrate_out`` gathers the source
+        lane, whatever its sharding); implanting re-shards it for THIS worker's
+        mesh, so migration crosses MP degrees — an mp=4 lane lands correctly on
+        an mp=1 pool and vice versa."""
         def check(dst, src):                  # fail fast on capacity/arch mismatch
             if (dst.shape[0],) + dst.shape[2:] != (src.shape[0],) + src.shape[2:]:
                 raise ValueError(
@@ -557,7 +643,10 @@ class RolloutWorker:
 
         jax.tree.map(check, self.pool["blocks"], package["cache"]["blocks"])
         slot = self._alloc_slot()
-        lane = jax.tree.map(jnp.asarray, package["cache"])  # host -> this worker
+        if self.mesh is not None:             # host -> this worker's sub-mesh
+            lane = self._place_cache(package["cache"])
+        else:
+            lane = jax.tree.map(jnp.asarray, package["cache"])
         self.pool = _implant(self.pool, lane, slot)
         key = package.get("key")
         if key is None:                                     # foreign package: re-key
@@ -608,4 +697,11 @@ class RolloutWorker:
             "retired_lanes": len(self.retired),
             "decode_steps": self.decode_steps,
             "pool_grows": self.pool_grows,
+            # §6 calibration feed: declared MP degree + measured decode timing
+            # (warm calls only), consumed by calibration_observations()
+            "mp": self.mp,
+            "decode_wall_s": self.decode_wall_s,
+            "decode_timed_steps": self.decode_timed_steps,
+            "decode_timed_lane_steps": self.decode_timed_lane_steps,
+            "decode_calls": self.decode_calls,
         }

@@ -9,7 +9,7 @@ generation length correlates with difficulty (the "execution plan" semantic anch
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -4,6 +4,8 @@ must never touch jax device state)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,3 +18,31 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — used by sharding tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def carve_worker_meshes(degrees, devices=None):
+    """Carve one disjoint ("data", "model") sub-mesh per rollout worker.
+
+    Worker ``i`` with model-parallel degree ``degrees[i]`` gets a ``(1, degrees[i])``
+    mesh over the next contiguous block of the device list, so a heterogeneous fleet
+    like {4, 2, 1, 1} occupies eight accelerators without overlap.  Degree-1 workers
+    in a meshed fleet get a trivial (1, 1) mesh over their reserved device — leaving
+    them un-meshed would land their params/KV on the *default* device, a chip already
+    owned by worker 0's sub-mesh, while the reserved chip idles.  An all-mp1 fleet
+    returns ``None`` for every worker (nothing to shard; the module-level jit cache
+    stays shared), as does any fleet the visible device set cannot cover
+    (``sum(degrees) > len(devices)`` — the un-forced CPU tier-1 environment); the
+    *declared* degrees still drive the control plane (placement, virtual token
+    times), only the physical sharding degrades.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    degrees = [int(d) for d in degrees]
+    if sum(degrees) > len(devices) or all(d == 1 for d in degrees):
+        return [None] * len(degrees)
+    meshes: list[Mesh | None] = []
+    off = 0
+    for d in degrees:
+        block = np.asarray(devices[off:off + d]).reshape(1, d)
+        meshes.append(Mesh(block, ("data", "model")))
+        off += d
+    return meshes

@@ -23,7 +23,8 @@ import time
 
 
 def build_runtime(args, cfg, params):
-    """Workload + predictor + controller + workers + runtime for one serve run."""
+    """Workload + predictor + controller + worker fleet + runtime for one run."""
+    from repro.engine.fleet import FleetSpec
     from repro.engine.runtime import (RuntimeConfig, build_workbench,
                                       make_runtime)
 
@@ -38,9 +39,13 @@ def build_runtime(args, cfg, params):
                          migration=args.migration == "on",
                          max_active=args.max_active, quantum=args.quantum,
                          tool_latency_scale=args.tool_latency, seed=args.seed)
+    fleet = None
+    if args.degrees:
+        fleet = FleetSpec.from_degrees(
+            [int(d) for d in args.degrees.split(",")])
     return make_runtime(cfg, params, batch, predictor,
                         n_workers=args.workers, config=rcfg,
-                        capacity=args.capacity)
+                        capacity=args.capacity, fleet=fleet)
 
 
 def main(argv=None):
@@ -52,6 +57,11 @@ def main(argv=None):
                          "affine placement keeps a group together so the radix "
                          "cache implants the shared prompt for siblings)")
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--degrees", default="",
+                    help="heterogeneous fleet: comma-separated per-worker MP "
+                         "degrees, e.g. '4,2,1,1' (§6; overrides --workers; "
+                         "mp>1 workers run on carved sub-meshes when the "
+                         "device set allows, un-meshed otherwise)")
     ap.add_argument("--steps", type=int, default=3,
                     help="agentic steps per trajectory (plans truncated here; "
                          "easy samples finish earlier; 0 = no cap, keeping the "

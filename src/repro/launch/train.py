@@ -10,7 +10,6 @@ Production dry-run (lower + compile the full config for the pod mesh):
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 

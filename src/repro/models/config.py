@@ -12,7 +12,7 @@ MLPs:   mlp | moe | moe_dr (MoE + parallel dense residual, arctic) | none
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Tuple
 
 

@@ -13,7 +13,6 @@ Masking: causal (q_pos >= k_pos) and optional sliding window (q_pos - k_pos < wi
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -72,23 +71,23 @@ def _flash_fwd_impl(q, k, v, q_pos, kv_pos, scale, causal, window, qb, kb):
         qi, qp = args
 
         def kv_blk(carry, kv_args):
-            m, l, acc = carry
+            m, lsum, acc = carry
             ki, vi, kp = kv_args
             s = jnp.einsum("bkgqd,bktd->bkgqt", qi.astype(F32), ki.astype(F32)) * scale
             s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            return (m_new, l * corr + p.sum(-1),
+            return (m_new, lsum * corr + p.sum(-1),
                     acc * corr[..., None] + jnp.einsum("bkgqt,bktd->bkgqd", p,
                                                        vi.astype(F32))), None
 
         m0 = jnp.full((B, KV, G, qb), -jnp.inf, F32)
         l0 = jnp.zeros((B, KV, G, qb), F32)
         a0 = jnp.zeros((B, KV, G, qb, hd), F32)
-        (m, l, acc), _ = lax.scan(kv_blk, (m0, l0, a0), (ks, vs, kps))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+        (m, lsum, acc), _ = lax.scan(kv_blk, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(lsum, 1e-30)), 0.0)
         return None, (out, lse)
 
     _, (outs, lses) = lax.scan(q_blk, None, (qs, qps))

@@ -15,7 +15,6 @@ Activation sharding constraints use logical axis names via ``repro.distributed.s
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -9,7 +9,6 @@ O(n_layers) for 30-40 layer models while expressing heterogeneous interleaves.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -9,8 +9,6 @@ policy-ratio objective.  ``train_step`` is also what the multi-pod dry-run lower
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

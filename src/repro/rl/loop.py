@@ -9,14 +9,13 @@ One training step (paper §2.2):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import InterferenceModel, place
-from repro.core.predictor import ProgressivePredictor
 from repro.engine.sampler import SamplerConfig
 from repro.engine.worker import RolloutWorker
 from repro.models import model as M

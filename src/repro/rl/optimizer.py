@@ -29,7 +29,8 @@ class AdamW:
 
     def init(self, params) -> AdamWState:
         mdt = jnp.dtype(self.moment_dtype)
-        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+        def zeros():
+            return jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
         return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
 
     def update(self, grads, state: AdamWState, params):

@@ -1,6 +1,7 @@
 """Sort-initialized simulated annealing (Algorithm 2)."""
 
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -71,3 +72,43 @@ def test_sa_deterministic_given_seed():
     a = sort_initialized_sa(lengths, 16, F, seed=42)
     b = sort_initialized_sa(lengths, 16, F, seed=42)
     assert a.degrees == b.degrees and a.makespan == b.makespan
+
+
+# ------------------------------------------------------------- §6 calibration
+
+def test_latency_model_fit_recovers_synthetic_ground_truth():
+    """Exact observations from a known (t1, overlap) are recovered to machine
+    precision, and the fitted token-time curve tracks the truth at every MP
+    degree — the §6 calibration contract (constants replaced by observations)."""
+    truth = WorkerLatencyModel(t1=0.02, overlap=0.3)
+    obs = [(mp, b, truth.base_token_time(mp, b))
+           for mp in (1, 2, 4, 8) for b in (1.0, 3.0, 6.0)]
+    fit = WorkerLatencyModel.fit(obs, comm_batch_coef=truth.comm_batch_coef)
+    assert fit.t1 == pytest.approx(truth.t1, rel=1e-9)
+    assert fit.overlap == pytest.approx(truth.overlap, rel=1e-9)
+    for mp in (1, 2, 4, 8, 16):          # curve parity, incl. extrapolated degree
+        assert fit.base_token_time(mp, 4.0) == pytest.approx(
+            truth.base_token_time(mp, 4.0), rel=1e-9)
+
+
+def test_latency_model_fit_tolerates_noise():
+    rng = np.random.default_rng(3)
+    truth = WorkerLatencyModel(t1=0.015, overlap=0.25)
+    obs = [(mp, b, truth.base_token_time(mp, b) * float(rng.uniform(0.95, 1.05)))
+           for mp in (1, 2, 4, 8) for b in (1.0, 2.0, 4.0, 8.0)]
+    fit = WorkerLatencyModel.fit(obs, comm_batch_coef=truth.comm_batch_coef)
+    assert fit.t1 == pytest.approx(truth.t1, rel=0.15)
+    for mp in (1, 2, 4, 8):
+        assert fit.base_token_time(mp, 2.0) == pytest.approx(
+            truth.base_token_time(mp, 2.0), rel=0.15)
+
+
+def test_latency_model_fit_degenerate_single_degree():
+    """One distinct MP degree cannot identify overlap: the prior shape is kept
+    and only t1 rescales to match the observed mean."""
+    prior = WorkerLatencyModel()
+    fit = WorkerLatencyModel.fit([(2, 1.0, 0.004), (2, 1.0, 0.006)])
+    assert fit.overlap == prior.overlap
+    assert fit.base_token_time(2, 1.0) == pytest.approx(0.005, rel=1e-9)
+    with pytest.raises(ValueError):
+        WorkerLatencyModel.fit([])
