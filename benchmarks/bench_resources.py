@@ -60,11 +60,15 @@ def run_fleet(cfg, params, fleet: FleetSpec, shape, seed: int) -> dict:
     task, n_prompts, group, max_active = shape
     batch, predictor = build_workbench(task=task, n_prompts=n_prompts,
                                        group_size=group, seed=seed)
+    # default preemption hysteresis: tuned for the unified orchestrator's
+    # causal event ordering (see docs/runtime.md "Event flow").  Load gap 2:
+    # the controller weighs migration loads in fast-worker equivalents, so on
+    # a heterogeneous fleet a 1-equivalent imbalance is within rounding of a
+    # single resident — both fleets run the same (fair) gate.
     rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=max_active,
-                         quantum=8, preemption_margin=1.5, preemption_floor=16.0,
-                         seed=seed)
+                         quantum=8, seed=seed)
     runtime = make_runtime(cfg, params, batch, predictor, config=rcfg,
-                           fleet=fleet)
+                           fleet=fleet, migration_load_gap=2)
     res = runtime.run()
     return {
         "runtime": runtime,

@@ -1,26 +1,34 @@
-"""End-to-end rollout runtime benchmark: PPS+migration vs FCFS on real workers.
+"""End-to-end rollout benchmark on the unified orchestrator: PPS vs FCFS,
+engine vs analytic twin.
 
-Drives the event-driven runtime (``repro.engine.runtime``) over a seeded
+Drives the one orchestration core (``repro.core.orchestrator``) over a seeded
 long-tail agentic workload — full trajectories with tool calls, preemptive
-per-worker queues, tool-interval KV migration — on the real slot-pool data
-plane, and compares Heddle's scheduling stack (PPS + progressive refresh +
-migration) against the FCFS/no-migration baseline on identical substrate:
+per-worker queues, tool-interval KV migration — on either execution backend:
 
-  * end-to-end virtual makespan (the §7.2 headline: long-tail neutralization),
-  * p99 per-step queue delay,
-  * preemption / migration / telemetry counters.
+  * ``--backend engine`` (default): the real slot-pool data plane
+    (``engine.backends.EngineBackend``) on its deterministic virtual clock;
+  * ``--backend sim``: the analytic twin (``SimBackend`` in engine-parity
+    mode via ``runtime.run_on_sim``) — no model, no decode, same decisions.
+
+and compares Heddle's scheduling stack (PPS + progressive refresh + migration)
+against the FCFS/no-migration baseline on identical substrate: end-to-end
+virtual makespan (the §7.2 headline), p99 per-step queue delay, and
+preemption / migration / telemetry counters.
+
+Because both backends share the orchestrator, the twin is a *predictive* model
+of the engine: the full run sweeps every scheduler policy on both and asserts
+the sim-vs-engine **makespan rank correlation** — the property that makes
+model-free policy sweeps on the twin trustworthy.  ``--smoke`` (CI) runs the
+reduced shape and asserts the runtime completes the workload with preemptions
++ migrations, that PPS does not regress vs FCFS, and that the twin ranks the
+two policies the same way.
 
 The workload is ``engine.workload`` plans miniaturized onto the reduced model
-(``runtime.miniaturize``: one multiplicative shrink for tokens AND tool
-latencies, preserving the lognormal tail and the paper's tool/generation time
-ratio), heavily oversubscribed (trajectories >> decode slots) so trajectory-
-level scheduling has something to do.  Virtual makespans depend only on the
-seeded plans — not on sampled token ids — so results are stable across
-platforms and JAX versions.
-
-Emits ``name,us_per_call,derived`` CSV rows and writes ``BENCH_rollout.json``.
-``--smoke`` (CI) runs the reduced shape and *asserts* the runtime completes the
-workload with preemptions + migrations and that PPS does not regress vs FCFS.
+(``runtime.miniaturize``), heavily oversubscribed (trajectories >> decode
+slots) so trajectory-level scheduling has something to do.  Virtual makespans
+depend only on the seeded plans — not on sampled token ids — so results are
+stable across platforms and JAX versions.  Emits ``name,us_per_call,derived``
+CSV rows and writes ``BENCH_rollout.json``.
 """
 
 from __future__ import annotations
@@ -29,37 +37,46 @@ import argparse
 import json
 import sys
 
-import jax
-
 from benchmarks.common import emit
-from repro.configs import get_config
-from repro.engine.runtime import RuntimeConfig, build_workbench, make_runtime
-from repro.models import model as M
 
 SEED = 5                       # seeded long-tail workload the comparison is on
 
 # (n_prompts, group_size, max_active): full = 48 trajectories on 2x2 decode
-# slots (12x oversubscription), smoke = 24 trajectories on 2x1
+# slots (12x oversubscription), smoke = 24 trajectories on 2x2
 FULL = (12, 4, 2)
-SMOKE = (6, 4, 1)
+SMOKE = (6, 4, 2)
+
+# the policy matrix the sim-vs-engine rank correlation is computed over
+POLICIES = [("pps", True), ("pps", False), ("sjf", False),
+            ("fcfs", False), ("rr", False)]
 
 
-def run_policy(cfg, params, scheduler: str, migration: bool, shape, seed: int):
+def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int):
+    from repro.engine.runtime import RuntimeConfig
+    return RuntimeConfig(scheduler=scheduler, migration=migration,
+                         max_active=max_active, quantum=8, seed=seed)
+
+
+def run_policy(cfg, params, scheduler: str, migration: bool, shape, seed: int,
+               backend: str = "engine") -> dict:
+    from repro.engine.runtime import build_workbench, make_runtime, run_on_sim
     n_prompts, group, max_active = shape
     batch, predictor = build_workbench(n_prompts=n_prompts, group_size=group,
                                        seed=seed)
-    rcfg = RuntimeConfig(scheduler=scheduler, migration=migration,
-                         max_active=max_active, quantum=8,
-                         preemption_margin=1.5, preemption_floor=16.0,
-                         seed=seed)
-    runtime = make_runtime(cfg, params, batch, predictor, n_workers=2,
-                           config=rcfg)
-    res = runtime.run()
-    rate = runtime.controller.measured_reuse_rate
+    rcfg = _runtime_config(scheduler, migration, max_active, seed)
+    if backend == "sim":
+        res = run_on_sim(batch, predictor, n_workers=2, config=rcfg)
+        reuse, tokens, wall = None, sum(t.tokens_generated for t in batch), 0.0
+    else:
+        runtime = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                               config=rcfg)
+        res = runtime.run()
+        reuse = runtime.controller.measured_reuse_rate
+        tokens, wall = res.total_tokens, res.wall_time
     return {
         "makespan_s": res.makespan,
-        "throughput_tok_s": res.throughput,
-        "total_tokens": res.total_tokens,
+        "throughput_tok_s": tokens / res.makespan if res.makespan else 0.0,
+        "total_tokens": tokens,
         "queue_delay_mean_s": res.queue_delay_mean,
         "queue_delay_p99_s": res.queue_delay_p99,
         "preemptions": res.preemptions,
@@ -67,26 +84,48 @@ def run_policy(cfg, params, scheduler: str, migration: bool, shape, seed: int):
         "finished": sum(t.finished for t in res.trajectories),
         "trajectories": len(res.trajectories),
         "agentic_steps": sum(t.num_steps for t in res.trajectories),
-        "measured_reuse_rate": rate,
-        "wall_s": res.wall_time,
+        "measured_reuse_rate": reuse,
+        "wall_s": wall,
         "events": res.events,
     }
 
 
-def run(smoke: bool = False, seed: int = SEED,
+def rank_corr(xs: list[float], ys: list[float]) -> float:
+    """Spearman rank correlation (no scipy; ties broken by input order)."""
+    def ranks(v):
+        order = sorted(range(len(v)), key=lambda i: v[i])
+        r = [0] * len(v)
+        for rank, i in enumerate(order):
+            r[i] = rank
+        return r
+    rx, ry = ranks(xs), ranks(ys)
+    n = len(xs)
+    if n < 2:
+        return 1.0
+    d2 = sum((a - b) ** 2 for a, b in zip(rx, ry))
+    return 1.0 - 6.0 * d2 / (n * (n * n - 1))
+
+
+def run(smoke: bool = False, seed: int = SEED, backend: str = "engine",
         json_path: str = "BENCH_rollout.json") -> dict:
     shape = SMOKE if smoke else FULL
+    # the model is always needed: even a sim-backend headline run crosses to
+    # the engine for the twin check (smoke) / the parity sweep (full)
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
     cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-    pps = run_policy(cfg, params, "pps", True, shape, seed)
-    fcfs = run_policy(cfg, params, "fcfs", False, shape, seed)
+    pps = run_policy(cfg, params, "pps", True, shape, seed, backend)
+    fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, backend)
     speedup = fcfs["makespan_s"] / pps["makespan_s"]
     results = {
         "workload": {
             "task": "coding", "seed": seed, "n_prompts": shape[0],
             "group_size": shape[1], "trajectories": shape[0] * shape[1],
             "workers": 2, "max_active_per_worker": shape[2],
+            "backend": backend,
         },
         "pps_migration": pps,
         "fcfs_baseline": fcfs,
@@ -94,6 +133,39 @@ def run(smoke: bool = False, seed: int = SEED,
         "queue_delay_p99_ratio": (fcfs["queue_delay_p99_s"]
                                   / max(pps["queue_delay_p99_s"], 1e-9)),
     }
+
+    if smoke:
+        # cheap twin check: the analytic backend must rank the two policies
+        # the way the measured backend does (the full run sweeps all policies)
+        twin = "sim" if backend == "engine" else "engine"
+        t_pps = run_policy(cfg, params, "pps", True, shape, seed, twin)
+        t_fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, twin)
+        results["twin_agrees"] = ((t_pps["makespan_s"] < t_fcfs["makespan_s"])
+                                  == (pps["makespan_s"] < fcfs["makespan_s"]))
+    else:
+        # sim-vs-engine makespan rank correlation across scheduler policies:
+        # the property that makes model-free policy sweeps on the twin sound.
+        # The sweep runs at the reduced shape — rank agreement is a property of
+        # the shared orchestrator + pricing, not of workload size.
+        eng_ms, sim_ms, names = [], [], []
+        for sched, mig in POLICIES:
+            names.append(f"{sched}{'+mig' if mig else ''}")
+            eng_ms.append(run_policy(cfg, params, sched, mig, SMOKE, seed,
+                                     "engine")["makespan_s"])
+            sim_ms.append(run_policy(cfg, params, sched, mig, SMOKE, seed,
+                                     "sim")["makespan_s"])
+        corr = rank_corr(eng_ms, sim_ms)
+        results["parity"] = {
+            "policies": names,
+            "engine_makespans_s": eng_ms,
+            "sim_makespans_s": sim_ms,
+            "makespan_rank_correlation": corr,
+        }
+        assert corr >= 0.8, (
+            f"sim-vs-engine makespan rank correlation {corr:.2f} < 0.8: the "
+            f"analytic twin no longer predicts engine policy ordering "
+            f"(engine {eng_ms}, sim {sim_ms})")
+
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
 
@@ -107,7 +179,9 @@ def run(smoke: bool = False, seed: int = SEED,
         ("rollout_queue_delay_p99_fcfs", fcfs["queue_delay_p99_s"] * 1e6, "s"),
         ("rollout_preemptions_pps", 0.0, pps["preemptions"]),
         ("rollout_migrations_pps", 0.0, pps["migrations"]),
-    ])
+    ] + ([("rollout_sim_engine_rank_corr", 0.0,
+           f"{results['parity']['makespan_rank_correlation']:.3f}")]
+         if "parity" in results else []))
 
     if smoke:
         # enforced invariants: the runtime drains the workload end to end, the
@@ -120,19 +194,24 @@ def run(smoke: bool = False, seed: int = SEED,
         assert pps["makespan_s"] < fcfs["makespan_s"], \
             (f"PPS+migration regressed vs FCFS: "
              f"{pps['makespan_s']:.3f} vs {fcfs['makespan_s']:.3f}")
+        assert results["twin_agrees"], "analytic twin ranks pps/fcfs differently"
     return results
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced shape + assert completion and no PPS "
-                         "regression vs FCFS (CI)")
+                    help="reduced shape + assert completion, no PPS regression "
+                         "vs FCFS, and twin rank agreement (CI)")
+    ap.add_argument("--backend", choices=["engine", "sim"], default="engine",
+                    help="execution backend for the headline comparison "
+                         "(sim = model-free analytic twin)")
     ap.add_argument("--seed", type=int, default=SEED)
     ap.add_argument("--json", default="BENCH_rollout.json")
     args = ap.parse_args(argv)
     emit([], header=True)
-    run(smoke=args.smoke, seed=args.seed, json_path=args.json)
+    run(smoke=args.smoke, seed=args.seed, backend=args.backend,
+        json_path=args.json)
     return 0
 
 

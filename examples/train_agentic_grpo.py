@@ -4,9 +4,11 @@ A real (reduced) llama-family model learns a tool-use task on CPU: the agent mus
 a calculator tool (emitting TOOL_CALL) and then produce the answer token the tool
 returned.  Every training step runs the paper's full cycle:
 
-  rollout  — trajectories generated on real RolloutWorkers (prefill, batched decode,
-             tool interrupts absorbed via incremental cache extension), placed by the
-             presorted DP;
+  rollout  — trajectories generated on real RolloutWorkers under the unified
+             orchestrator (prefill, batched decode, tool interrupts absorbed via
+             incremental cache extension; presorted-DP placement, PPS queues with
+             preemptive execution, progressive prediction refresh, tool-interval
+             migration — the full control plane, not a side-car loop);
   inference — old-policy logprobs (fused chunked cross-entropy);
   training  — GRPO update (group-relative advantages, clipped ratio).
 
@@ -49,9 +51,11 @@ def main():
             tool_rate = sum(1 for r in records
                             if any(t == D.TOOL_CALL for t in r.tokens[r.prompt_len:])) \
                 / len(records)
+            ro = trainer.last_rollout
             print(f"iter {it+1:4d}  reward(ma10) {avg:5.3f}  "
                   f"tool-call rate {tool_rate:4.2f}  loss {metrics['loss']:+.4f}  "
-                  f"({time.time()-t0:5.1f}s)")
+                  f"sched[preempt {ro.preemptions} migr {ro.migrations} "
+                  f"qdelay {ro.queue_delay_mean:.3f}s]  ({time.time()-t0:5.1f}s)")
     print("done.")
 
 

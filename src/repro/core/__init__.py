@@ -7,10 +7,18 @@
   migration         — scaled-capacity re-placement + transmission scheduler (§5.3)
   resource_manager  — sort-initialized simulated annealing, Algorithm 2 (§6.2)
   controller        — control plane + baseline routing policies (§3, §7)
+  orchestrator      — THE event loop: one lifecycle state machine driving a
+                      pluggable ExecutionBackend (engine.backends: the analytic
+                      SimBackend and the real-worker EngineBackend), so every
+                      scheduling/preemption/migration decision is made by
+                      exactly one code path on either substrate
 """
 
 from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
                                   TransmissionScheduler, kv_cache_bytes)
+from repro.core.orchestrator import (ExecutionBackend, Orchestrator,
+                                     OrchestratorConfig, OrchestratorResult,
+                                     StepOutcome)
 from repro.core.placement import (InterferenceModel, PlacementResult,
                                   aggregate_short, brute_force_partition,
                                   evaluate_partition, place, presorted_dp)

@@ -263,6 +263,16 @@ class HeddleController:
         self._live = np.ones(len(trajectories), dtype=bool)
         # per-worker live-trajectory counts (migration load feedback)
         self._worker_count = np.array([len(g) for g in groups], dtype=np.int64)
+        # heterogeneity-aware load weights: a resident trajectory on a slow
+        # (low-MP) worker represents more drain time than one on a fast worker,
+        # so the migration gate compares counts in fast-worker equivalents —
+        # count * token_time / min(token_time).  Homogeneous fleets reduce to
+        # the plain counts this replaces.
+        if self.degrees and len(self.degrees) == m:
+            tts = np.asarray(self.latency.token_times(self.degrees), dtype=float)
+            self._load_weight = tts / tts.min()
+        else:
+            self._load_weight = np.ones(m, dtype=float)
         self._finished_ids.clear()
         self._pending_migration.clear()
         for t in trajectories:
@@ -298,14 +308,18 @@ class HeddleController:
         target = self.capacity_router.worker_for_rank(rank, n_active)
         # load feedback (beyond-paper, EXPERIMENTS.md §Perf): the paper's open-loop
         # scaled-capacity mapping over-concentrates late-discovered tails on the few
-        # original "long" workers; pick the least-populated worker within a
-        # +/-2-group window of the capacity target instead.
+        # original "long" workers; pick the least-loaded worker within a
+        # +/-2-group window of the capacity target instead.  Loads are in
+        # fast-worker equivalents (count * relative token time): on a
+        # heterogeneous fleet an "idle" mp=1 worker is NOT a good home for a
+        # tail that a busy mp=4 worker would still drain sooner.
+        loads = self._worker_count * self._load_weight
         lo, hi = max(0, target - 2), min(len(self._worker_count), target + 3)
-        target = lo + int(np.argmin(self._worker_count[lo:hi]))
+        target = lo + int(np.argmin(loads[lo:hi]))
         # material-benefit gate: a migration must buy a real interference reduction
         # (KV transfer + re-warm are not free), so require a clear load gap
-        if self._worker_count[target] + self.config.migration_load_gap \
-                > self._worker_count[traj.worker_id]:
+        if loads[target] + self.config.migration_load_gap \
+                > loads[traj.worker_id]:
             return None
         if target != traj.worker_id:
             # hysteresis: only migrate when the prediction moved materially since the

@@ -1,0 +1,451 @@
+"""The one event-driven orchestration core (control plane, backend-agnostic).
+
+Heddle's trajectory-centric decisions — *when* (progressive priority scheduling
+with preemptive execution, Algorithm 1), *where* (placement + tool-interval
+migration, §5.3), *how fast* (per-worker MP pricing, §6) — used to be executed
+by two hand-rolled twin event loops: one inside the discrete-event simulator and
+one inside the real-engine runtime.  Every policy change had to land twice and
+the loops drifted.  ``Orchestrator`` is the single canonical lifecycle machine
+
+    PENDING → GENERATING ⇄ PREEMPTED
+                  │
+                  ▼
+              TOOL_CALL → MIGRATING → (PENDING …) → FINISHED
+
+driving a pluggable :class:`ExecutionBackend` that supplies only *mechanics and
+cost*: how a generation step advances, what it costs in virtual seconds, how a
+lane is preempted or migrated, and what the step's tool call returns.  Two
+backends ship in ``repro.engine.backends``:
+
+* ``SimBackend`` — the analytic processor-sharing cost model (paper-scale
+  studies: 64 workers, thousands of trajectories, 40K-token tails);
+* ``EngineBackend`` — the real ``RolloutWorker`` slot-pool data plane on a
+  deterministic virtual clock (real tokens, real KV lanes, real migrations).
+
+Because both backends run under this one loop, the scheduling/migration
+*decision sequence* is a property of the policy, not of the substrate — the
+decision-trace parity harness (``tests/test_orchestrator.py``) asserts the two
+backends produce identical ``(event, traj, worker)`` traces on the same
+workload.  All policy hooks flow through ``HeddleController`` exactly once:
+``initial_placement``, ``on_step_complete`` (progressive refresh + migration
+emission), ``commit_migration``/``abort_migration``, ``on_finish``,
+``record_worker_stats``.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import make_scheduler
+from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
+
+
+@dataclass(frozen=True)
+class StepOutcome:
+    """What one completed generation step looked like, backend-reported.
+
+    ``gen_tokens`` is the step's actual generation length (plan tokens for the
+    simulator, decoded tokens for the engine), ``terminal`` ends the episode,
+    and the ``tool_*`` fields describe the tool call the step triggered (for a
+    terminal step they are recorded but no tool interval is waited out).
+    """
+
+    gen_tokens: int
+    terminal: bool
+    tool_latency: float
+    tool_failed: bool
+    tool_output_tokens: int
+    gen_time: float = 0.0
+
+
+class ExecutionBackend(Protocol):
+    """Mechanics-and-cost contract the orchestrator drives (see docs/runtime.md).
+
+    The orchestrator owns lifecycle, queues, preemption policy, migration
+    policy and all controller traffic; the backend owns *how work advances and
+    what it costs*.  A backend is either **interruptible** (``advance`` can
+    settle partial progress at any instant — analytic cost models) or not
+    (work is quantized; new arrivals wait for the current quantum — real
+    engines).  The orchestrator adapts its event discipline accordingly.
+    """
+
+    interruptible: bool
+
+    @property
+    def n_workers(self) -> int: ...
+
+    def admit(self, trajectories: Sequence[Trajectory]) -> None:
+        """One-time batch admission (e.g. prompt prefill), charged to clocks."""
+        ...
+
+    def ready_time(self, wid: int, now: float) -> float:
+        """Earliest instant worker ``wid`` can start newly queued work."""
+        ...
+
+    def dispatch(self, wid: int, traj: Trajectory, fresh: bool) -> float:
+        """Start (``fresh``) or resume a step on ``wid``; returns its token-work."""
+        ...
+
+    def preempt(self, wid: int, traj: Trajectory) -> None:
+        """Evict ``traj`` mid-step, persisting its remaining work and state."""
+        ...
+
+    def advance(self, wid: int, now: float) -> Iterable[int]:
+        """Progress ``wid`` to ``now``; returns traj_ids whose step completed."""
+        ...
+
+    def next_completion(self, wid: int, now: float) -> Optional[float]:
+        """Time of ``wid``'s next step completion (None if idle)."""
+        ...
+
+    def tool_submit(self, traj: Trajectory) -> StepOutcome:
+        """Roll the completed step's tool call; returns the step's outcome."""
+        ...
+
+    def tool_absorb(self, traj: Trajectory) -> None:
+        """Fold the pending tool output into the trajectory's context."""
+        ...
+
+    def can_migrate(self, traj: Trajectory) -> bool: ...
+
+    def migrate_out(self, traj: Trajectory, dst: int) -> float:
+        """Extract the trajectory's state for transfer; returns link seconds."""
+        ...
+
+    def migrate_in(self, traj: Trajectory, dst: int) -> None:
+        """Land the in-flight state on worker ``dst``."""
+        ...
+
+    def release(self, traj: Trajectory) -> None:
+        """The trajectory finished; free (or retire) its resources."""
+        ...
+
+    def stats(self, wid: int) -> dict:
+        """Measured telemetry snapshot for ``wid`` ({} when nothing measured)."""
+        ...
+
+
+@dataclass(frozen=True)
+class OrchestratorConfig:
+    scheduler: str = "pps"  # pps | fcfs | rr | sjf (per-worker queues)
+    migration: bool = True  # tool-interval migration (§5.3)
+    max_active: int = 4  # concurrent generation slots per worker
+    preemption_margin: float = 1.0  # PPS hysteresis (multiplicative)
+    preemption_floor: float = 1.0  # PPS hysteresis (additive)
+    max_events: int = 2_000_000  # runaway-loop guard
+    timeline_every: int = 0  # sample (t, live) every N events (0 = off)
+    trace: bool = False  # record the (event, traj, worker) decision trace
+
+
+@dataclass
+class OrchestratorResult:
+    makespan: float
+    preemptions: int
+    migrations: int
+    queue_delay_mean: float  # over per-step queue delays
+    queue_delay_p99: float
+    trajectories: list[Trajectory] = field(default_factory=list)
+    events: int = 0
+    trace: list[tuple[str, int, int]] = field(default_factory=list)
+    timeline: list[tuple[float, int]] = field(default_factory=list)
+
+
+class _WorkerLane:
+    """One worker's control-plane view: queue + active set + event bookkeeping."""
+
+    def __init__(self, wid: int, scheduler_name: str):
+        self.wid = wid
+        self.scheduler = make_scheduler(scheduler_name)
+        self.active: set[int] = set()  # traj_ids with a step in progress
+        self.version = 0  # event-staleness guard
+        self.sleeping = True  # no worker event in flight
+
+
+class Orchestrator:
+    """The canonical rollout event loop over a pluggable execution backend.
+
+    The caller supplies the backend, the trajectory batch and exactly one
+    placement/policy source: a ``HeddleController`` (full Heddle stack —
+    placement DP, progressive refresh, migration) or a baseline ``routing``
+    policy plus a bare ``predictor`` (§7 comparison systems).  ``run()``
+    executes the batch to completion and returns substrate-independent metrics
+    plus (optionally) the decision trace.
+    """
+
+    def __init__(
+        self,
+        backend: ExecutionBackend,
+        trajectories: Sequence[Trajectory],
+        config: OrchestratorConfig = OrchestratorConfig(),
+        *,
+        controller=None,
+        routing=None,
+        predictor=None,
+    ):
+        if controller is None and predictor is None:
+            raise ValueError("need a controller or a bare predictor")
+        if controller is None and routing is None:
+            raise ValueError("need a controller or a routing policy for placement")
+        self.backend = backend
+        self.cfg = config
+        self.controller = controller
+        self.routing = routing
+        self.predictor = predictor if predictor is not None else controller.predictor
+        self.trajs = list(trajectories)
+        self.by_id = {t.traj_id: t for t in self.trajs}
+        self.lanes = [_WorkerLane(w, config.scheduler) for w in range(backend.n_workers)]
+        for lane in self.lanes:
+            if hasattr(lane.scheduler, "preemption_margin"):
+                lane.scheduler.preemption_margin = config.preemption_margin
+                lane.scheduler.preemption_floor = config.preemption_floor
+        self._mid_step: set[int] = set()  # step in progress (resume ≠ fresh)
+        self.in_flight: dict[int, int] = {}  # migrating traj -> destination
+        self.tool_arrived: set[int] = set()  # tool done while state in flight
+        self.preemptions = 0
+        self.migrations = 0
+        self.events = 0
+        self.trace: list[tuple[str, int, int]] = []
+        self.timeline: list[tuple[float, int]] = []
+        self._evq: list[tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------ event plumbing
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._evq, (t, next(self._seq), kind, payload))
+
+    def _note(self, kind: str, tid: int, wid: int) -> None:
+        if self.cfg.trace:
+            self.trace.append((kind, tid, wid))
+
+    def _loads(self) -> np.ndarray:
+        return np.asarray(
+            [len(ln.active) + len(ln.scheduler) for ln in self.lanes], float
+        )
+
+    def _plan(self, lane: _WorkerLane, now: float) -> None:
+        """Re-derive the worker's next completion event; stale events die."""
+        lane.version += 1
+        nc = self.backend.next_completion(lane.wid, now)
+        if nc is None:
+            lane.sleeping = True
+        else:
+            lane.sleeping = False
+            self._push(nc, "worker", (lane.wid, lane.version))
+
+    def _worker_pass(self, lane: _WorkerLane, now: float) -> None:
+        """Settle work, handle completed steps, refill, replan — one pass."""
+        for tid in self.backend.advance(lane.wid, now):
+            lane.active.discard(tid)
+            self._mid_step.discard(tid)
+            self._complete_step(self.by_id[tid], lane, now)
+        self._dispatch(lane, now)
+        self._plan(lane, now)
+
+    def _submit(self, traj: Trajectory, now: float) -> None:
+        """Queue the trajectory's next generation step on its current worker."""
+        lane = self.lanes[traj.worker_id]
+        traj._queued_at = now
+        lane.scheduler.submit(traj, now)
+        if self.backend.interruptible:
+            self._worker_pass(lane, now)
+        elif lane.sleeping:
+            lane.sleeping = False
+            lane.version += 1
+            self._push(
+                self.backend.ready_time(lane.wid, now),
+                "worker",
+                (lane.wid, lane.version),
+            )
+
+    # ------------------------------------------------------------ dispatch / preempt
+    def _start(self, lane: _WorkerLane, traj: Trajectory, now: float) -> None:
+        tid = traj.traj_id
+        traj._step_queue_delay = getattr(traj, "_step_queue_delay", 0.0) + max(
+            0.0, now - getattr(traj, "_queued_at", now)
+        )
+        fresh = tid not in self._mid_step
+        self._mid_step.add(tid)
+        traj.phase = TrajectoryPhase.GENERATING
+        lane.active.add(tid)
+        self.backend.dispatch(lane.wid, traj, fresh)
+        self._note("start", tid, lane.wid)
+
+    def _preempt(self, lane: _WorkerLane, victim: Trajectory, now: float) -> None:
+        """Algorithm 1 lines 5-10: evict, persist state, requeue."""
+        tid = victim.traj_id
+        self.backend.preempt(lane.wid, victim)
+        lane.active.discard(tid)  # _mid_step persists: next start is a resume
+        victim.preemptions += 1
+        self.preemptions += 1
+        victim.phase = TrajectoryPhase.PREEMPTED
+        victim._queued_at = now
+        lane.scheduler.submit(victim, now)
+        self._note("preempt", tid, lane.wid)
+
+    def _dispatch(self, lane: _WorkerLane, now: float) -> None:
+        while len(lane.active) < self.cfg.max_active and len(lane.scheduler):
+            traj = lane.scheduler.pop(now)
+            if traj is None:
+                break
+            self._start(lane, traj, now)
+        if lane.scheduler.preemptive and len(lane.scheduler):
+            for _ in range(len(lane.active)):
+                active = [self.by_id[t] for t in lane.active]
+                victim = lane.scheduler.preempt_victim(active)
+                if victim is None:
+                    break
+                self._preempt(lane, victim, now)
+                nxt = lane.scheduler.pop(now)
+                if nxt is not None:
+                    self._start(lane, nxt, now)
+
+    # ------------------------------------------------------------ step lifecycle
+    def _complete_step(self, traj: Trajectory, lane: _WorkerLane, now: float) -> None:
+        out = self.backend.tool_submit(traj)
+        rec = StepRecord(
+            traj.num_steps,
+            int(out.gen_tokens),
+            out.tool_latency,
+            tool_failed=out.tool_failed,
+            tool_output_tokens=out.tool_output_tokens,
+            queue_delay=getattr(traj, "_step_queue_delay", 0.0),
+            gen_time=out.gen_time,
+        )
+        traj.record_step(rec)
+        traj._step_queue_delay = 0.0
+        traj.record_tool_output(out.tool_output_tokens)
+        stats = self.backend.stats(lane.wid)
+        if stats and self.controller is not None:
+            self.controller.record_worker_stats(lane.wid, stats)
+        self._note("step", traj.traj_id, lane.wid)
+        if out.terminal:
+            traj.finished = True
+            traj.finish_time = now
+            traj.phase = TrajectoryPhase.FINISHED
+            if self.controller is not None:
+                self.controller.on_finish(traj)
+            self.backend.release(traj)
+            self._note("finish", traj.traj_id, lane.wid)
+            return
+        traj.phase = TrajectoryPhase.TOOL_CALL
+        self._push(now + out.tool_latency, "tool_done", traj.traj_id)
+        # progressive refresh + migration decision, masked by the tool interval
+        if self.controller is not None:
+            req = self.controller.on_step_complete(traj, ())
+            if req is not None and self.cfg.migration:
+                for r in self.controller.transmission.next_batch():
+                    self._launch_migration(r, now)
+        else:
+            traj.predicted_remaining = self.predictor.predict(traj)
+            traj.priority = traj.predicted_total
+
+    # ------------------------------------------------------------ migration (§5.3)
+    def _launch_migration(self, req, now: float) -> None:
+        traj = self.by_id.get(req.traj_id)
+        if (
+            traj is None
+            or traj.phase is not TrajectoryPhase.TOOL_CALL
+            or not self.backend.can_migrate(traj)
+        ):
+            # resumed, finished, or already moved: migrating now would stall the
+            # critical path — drop without touching load accounting
+            self.controller.transmission.complete(req.traj_id)
+            self.controller.abort_migration(req.traj_id)
+            return
+        dur = self.backend.migrate_out(traj, req.dst)
+        self.controller.commit_migration(req.traj_id)
+        traj.phase = TrajectoryPhase.MIGRATING
+        traj.migrations += 1
+        self.migrations += 1
+        self.in_flight[req.traj_id] = req.dst
+        self._push(now + dur, "migration_done", req.traj_id)
+        self._note("migrate", req.traj_id, req.dst)
+
+    def _on_migration_done(self, tid: int, now: float) -> None:
+        dst = self.in_flight.pop(tid)
+        traj = self.by_id[tid]
+        self.backend.migrate_in(traj, dst)
+        traj.worker_id = dst
+        self.controller.transmission.complete(tid)
+        self._note("migrate_done", tid, dst)
+        for r in self.controller.transmission.next_batch():
+            self._launch_migration(r, now)
+        if tid in self.tool_arrived:  # transfer outlived the tool call
+            self.tool_arrived.discard(tid)
+            self._resume(traj, now)
+        else:  # fully masked by the tool call
+            traj.phase = TrajectoryPhase.TOOL_CALL
+
+    def _on_tool_done(self, tid: int, now: float) -> None:
+        traj = self.by_id[tid]
+        self._note("tool_done", tid, traj.worker_id)
+        if tid in self.in_flight:  # state still on the wire: wait for it
+            self.tool_arrived.add(tid)
+            return
+        self._resume(traj, now)
+
+    def _resume(self, traj: Trajectory, now: float) -> None:
+        # resuming invalidates any emitted-but-unlaunched migration: its target
+        # was chosen from now-stale load/rank data
+        if self.controller is not None:
+            self.controller.abort_migration(traj.traj_id)
+        if self.routing is not None:
+            traj.worker_id = int(self.routing.step_worker(traj, self._loads()))
+        self.backend.tool_absorb(traj)
+        self._submit(traj, now)
+
+    # ------------------------------------------------------------ run
+    def run(self) -> OrchestratorResult:
+        for t in self.trajs:
+            t.predicted_remaining = self.predictor.predict(t)
+            t.priority = t.predicted_total
+            t.submit_time = 0.0
+        if self.routing is not None:
+            loads = np.zeros(len(self.lanes))
+            for t in self.trajs:
+                t.worker_id = int(self.routing.initial_worker(t, loads))
+                loads[t.worker_id] += 1
+        else:
+            self.controller.initial_placement(self.trajs)
+        self.backend.admit(self.trajs)
+        for t in self.trajs:
+            self._submit(t, 0.0)
+
+        now = 0.0
+        while self._evq:
+            self.events += 1
+            if self.events > self.cfg.max_events:
+                raise RuntimeError("orchestrator event budget exceeded")
+            now, _, kind, payload = heapq.heappop(self._evq)
+            if kind == "worker":
+                wid, ver = payload
+                lane = self.lanes[wid]
+                if ver != lane.version:
+                    continue  # stale event superseded by a replan
+                self._worker_pass(lane, now)
+            elif kind == "tool_done":
+                self._on_tool_done(payload, now)
+            elif kind == "migration_done":
+                self._on_migration_done(payload, now)
+            if self.cfg.timeline_every and self.events % self.cfg.timeline_every == 0:
+                self.timeline.append((now, sum(1 for t in self.trajs if not t.finished)))
+
+        unfinished = [t.traj_id for t in self.trajs if not t.finished]
+        assert not unfinished, f"orchestrator drained with live trajectories {unfinished}"
+        delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
+        return OrchestratorResult(
+            makespan=max(t.finish_time for t in self.trajs),
+            preemptions=self.preemptions,
+            migrations=self.migrations,
+            queue_delay_mean=float(delays.mean()) if len(delays) else 0.0,
+            queue_delay_p99=float(np.quantile(delays, 0.99)) if len(delays) else 0.0,
+            trajectories=self.trajs,
+            events=self.events,
+            trace=self.trace,
+            timeline=self.timeline,
+        )

@@ -1,54 +1,45 @@
-"""Event-driven trajectory-centric rollout runtime: control plane meets data plane.
+"""Real-engine rollout runtime = orchestrator + RolloutWorker backend.
 
-This module closes the seam the repo previously left open: the trajectory-level
-mechanisms of the paper (§4 scheduling/preemption, §5.3 tool-interval migration,
-§4.1 progressive prediction) only ever ran inside the discrete-event *simulator*,
-while the real ``RolloutWorker`` JAX data plane was driven by a static one-shot
-loop with no tool calls, no queues, and no preemption.  ``RolloutRuntime`` drives
-real workers through full agentic trajectories — generate → tool call → absorb →
-repeat — under the real control plane:
+``RolloutRuntime`` runs full agentic trajectories — generate → tool call →
+absorb → repeat — on the real slot-pool data plane (``engine.worker``,
+``engine.fleet``), under the same canonical control loop the simulator uses:
+``core.orchestrator.Orchestrator`` driving an ``engine.backends.EngineBackend``.
+This module contributes the *engine-side wiring*, not an event loop of its own
+(the former twin loop is gone):
 
-  * **per-worker scheduler queues** (``core.scheduler``: pps | fcfs | rr | sjf)
-    gate *decode concurrency* (``max_active`` lanes decode together; the paper's
-    batch-size-driven interference premise), with real preemptive execution:
-    ``PPSScheduler.preempt_victim`` evicts the weakest active trajectory via
-    ``worker.preempt`` — a mask flip, the KV cache persists in its lane;
-  * **progressive prediction refresh** on every tool return
-    (``HeddleController.on_step_complete`` → ``ProgressivePredictor.predict``),
-    so queue priorities track runtime context, not prompt-time guesses;
-  * **opportunistic migration during tool-call idle intervals**: controller
-    emits ``MigrationRequest``s, the ``TransmissionScheduler`` batches them
-    endpoint-exclusively, and the runtime executes real ``migrate_out`` /
-    ``migrate_in`` lane transfers whose duration is the *measured* package bytes
-    over the configured link;
-  * **telemetry feedback**: each worker's ``dispatch_stats()`` flows through
-    ``record_worker_stats`` so ``measured_reuse_rate`` reflects the run.
+  * workload helpers — ``miniaturize`` (paper-scale plans → engine scale, tail
+    and tool/gen ratio preserving), ``synth_prompts``, ``build_workbench``;
+  * ``ToolEnvironment`` — deterministic tool backend (paper §3 'Tool Manager'):
+    plan-driven outcomes, per-``(traj, step)``-seeded token ids *and* sampled
+    latencies, so results never depend on backend or invocation order;
+  * ``make_runtime`` / ``run_on_sim`` — identical controller wiring for the
+    real fleet and for its analytic twin (the decision-trace parity pair);
+  * ``calibrate()`` / ``reconfigure()`` — the §6 feedback loop: measured decode
+    timing refits the latency model, Algorithm 2 re-provisions, and the fleet
+    split/merges between runs.
 
-Time is a **virtual event clock**: decoded tokens are real (real model, real KV
-lanes, real sampling keys), but each decode quantum of ``q`` tokens at batch
+Time is a **virtual event clock**: decoded tokens are real (real model, real
+KV lanes, real sampling keys), but each decode quantum of ``q`` tokens at batch
 ``b`` costs ``q * token_time * F(b)`` virtual seconds and tool calls cost their
 workload-sampled latencies.  That keeps end-to-end makespans deterministic,
 hardware-independent, and long-tail-faithful while the data plane does the
-actual token work — the same methodology the paper uses to profile §5.2, now
-wrapped around the real engine.  See docs/runtime.md for the lifecycle
-(PENDING → GENERATING → TOOL_CALL → MIGRATING → FINISHED) and invariants.
+actual token work.  See docs/runtime.md for the orchestrator/backend contract
+and the lifecycle (PENDING → GENERATING → TOOL_CALL → MIGRATING → FINISHED).
 """
 
 from __future__ import annotations
 
-import heapq
-import itertools
 import time
 from dataclasses import dataclass, field
 
-import jax
 import numpy as np
 
 from repro.core.controller import HeddleController
-from repro.core.migration import MigrationRequest, migration_time
-from repro.core.scheduler import make_scheduler
-from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig, OrchestratorResult
+from repro.core.trajectory import Trajectory
+from repro.engine.backends import EngineBackend, SimBackend
 from repro.engine.fleet import FleetSpec, RolloutFleet
+from repro.engine.tools import TOOL_PROFILES, ToolProfile
 from repro.engine.worker import RolloutWorker
 from repro.engine.workload import TrajectoryPlan
 
@@ -72,6 +63,7 @@ class RuntimeConfig:
     # these when the batch is heavily oversubscribed (units: predicted tokens)
     preemption_margin: float = 1.0
     preemption_floor: float = 2.0
+    trace: bool = False                  # record the decision trace (parity harness)
     seed: int = 0
 
 
@@ -86,9 +78,10 @@ class RuntimeResult:
     queue_delay_p99: float
     trajectories: list[Trajectory] = field(default_factory=list)
     worker_stats: dict[int, dict] = field(default_factory=dict)
-    wall_time: float = 0.0               # real seconds spent in the data plane
+    wall_time: float = 0.0               # real seconds spent end to end
     events: int = 0
     degrees: list[int] = field(default_factory=list)  # fleet MP degrees (§6)
+    trace: list[tuple[str, int, int]] = field(default_factory=list)
 
 
 @dataclass
@@ -96,35 +89,65 @@ class ToolResult:
     latency: float
     failed: bool
     output_tokens: list[int]
+    terminal: bool = False
 
 
 class ToolEnvironment:
     """Deterministic simulated tool backend (paper §3 'Tool Manager', elastic FaaS).
 
-    Outcomes — latency, failure, output size — come from the trajectory's
-    pre-rolled ``TrajectoryPlan`` (``engine.workload`` distributions, Table 1
-    latency calibration); the output token *ids* are drawn from an rng seeded by
-    (seed, traj_id, step), so every run over the same workload absorbs identical
-    tool tokens regardless of scheduling order.
+    Plan-driven outcomes — latency, failure, output size — come from the
+    trajectory's pre-rolled ``TrajectoryPlan`` (``engine.workload``
+    distributions, Table 1 latency calibration).  Everything stochastic the
+    environment produces itself — output token *ids*, and sampled latencies for
+    plan-less trajectories — is drawn from an rng seeded by
+    ``(seed, traj_id, step)``: the same trajectory sees the same tool behavior
+    regardless of which backend runs it or in what order steps across the batch
+    interleave (the per-call-sequence rng this replaced broke exactly that).
     """
 
     def __init__(self, seed: int = 0, latency_scale: float = 1.0,
-                 vocab: tuple[int, int] = (5, 105)):
+                 vocab: tuple[int, int] = (5, 105),
+                 profile: ToolProfile | None = None):
         self.seed = seed
         self.latency_scale = latency_scale
         self.vocab = vocab
+        self.profile = profile
         self.invocations = 0
         self.total_latency = 0.0
+
+    def _rng(self, traj_id: int, step: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, traj_id, step))
+
+    def sample_latency(self, traj_id: int, step: int) -> float:
+        """Profile-sampled latency, seeded per (traj, step) — order-independent."""
+        profile = self.profile or TOOL_PROFILES["math"]
+        return float(profile.sample_latency(self._rng(traj_id, step))) \
+            * self.latency_scale
 
     def invoke(self, traj: Trajectory, step: int) -> ToolResult:
         plan: TrajectoryPlan = traj.payload
         lat = float(plan.tool_latency[step]) * self.latency_scale
         n_out = int(plan.tool_output_tokens[step])
-        rng = np.random.default_rng((self.seed, traj.traj_id, step))
-        toks = [int(t) for t in rng.integers(*self.vocab, n_out)]
+        toks = [int(t) for t in self._rng(traj.traj_id, step).integers(
+            *self.vocab, n_out)]
         self.invocations += 1
         self.total_latency += lat
         return ToolResult(lat, bool(plan.tool_failed[step]), toks)
+
+    def step_outcome(self, traj: Trajectory, step: int, gen_tokens: list[int],
+                     context: list[int]) -> ToolResult:
+        """The EngineBackend environment hook: roll the step's tool + terminality.
+
+        The terminal step's tool ends the episode: its plan outcome is recorded
+        for predictor-feature parity (harvest replays it too) but the
+        environment is never invoked — no tool actually runs."""
+        plan: TrajectoryPlan = traj.payload
+        if step + 1 >= plan.num_steps:
+            return ToolResult(float(plan.tool_latency[step]) * self.latency_scale,
+                              bool(plan.tool_failed[step]),
+                              [0] * int(plan.tool_output_tokens[step]),
+                              terminal=True)
+        return self.invoke(traj, step)
 
 
 # ---------------------------------------------------------------- workload helpers
@@ -221,6 +244,30 @@ def build_workbench(task: str = "coding", n_prompts: int = 6, group_size: int = 
     return batch, predictor
 
 
+def _make_controller(predictor, config: RuntimeConfig, spec: FleetSpec, *,
+                     migration_load_gap: int = 1, migration_cooldown_steps: int = 1,
+                     rank_hysteresis: float = 0.2) -> HeddleController:
+    """One controller construction for the real fleet AND its analytic twin.
+
+    Gates default to small-cluster values (load gap 1, short cooldown): at a
+    few workers and a few dozen live trajectories, the simulator-scale defaults
+    never see a gap wide enough to open.  Heterogeneous fleets usually want a
+    wider gap (the controller weighs loads in fast-worker equivalents, so a
+    1-equivalent imbalance is within rounding of a single resident)."""
+    from repro.core.controller import HeddleConfig
+    from repro.core.placement import InterferenceModel
+    from repro.core.resource_manager import WorkerLatencyModel
+    return HeddleController(
+        predictor, InterferenceModel.analytic(config.kv_weight_ratio),
+        WorkerLatencyModel(t1=config.token_time), gpu_budget=spec.budget,
+        config=HeddleConfig(scheduler=config.scheduler, adaptive_resources=False,
+                            migration=config.migration,
+                            migration_load_gap=migration_load_gap,
+                            migration_cooldown_steps=migration_cooldown_steps,
+                            rank_hysteresis=rank_hysteresis),
+        max_workers=spec.n_workers)
+
+
 def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                  n_workers: int = 2, config: RuntimeConfig = RuntimeConfig(), *,
                  fleet: FleetSpec | None = None, capacity: int | None = None,
@@ -230,30 +277,18 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
     """Wire controller + real worker fleet + tool environment into a RolloutRuntime.
 
     ``fleet`` is the per-worker MP degree spec (§6); omitted, it defaults to a
-    homogeneous mp=1 fleet of ``n_workers`` — the pre-heterogeneous behavior.
-    A non-trivial spec builds each worker on its own carved sub-mesh (when the
-    device set allows) and prices its virtual decode clock through the
-    controller's ``WorkerLatencyModel``, so long-tail partitions land on — and
-    actually decode faster on — the high-MP workers.
-
-    Controller gates default to small-cluster values (load gap 1, short
-    cooldown): at a few workers and a few dozen live trajectories, the
-    simulator-scale defaults never see a gap wide enough to open.
+    homogeneous mp=1 fleet of ``n_workers``.  A non-trivial spec builds each
+    worker on its own carved sub-mesh (when the device set allows) and prices
+    its virtual decode clock through the controller's ``WorkerLatencyModel``,
+    so long-tail partitions land on — and actually decode faster on — the
+    high-MP workers.
     """
-    from repro.core.controller import HeddleConfig
-    from repro.core.placement import InterferenceModel
-    from repro.core.resource_manager import WorkerLatencyModel
     from repro.engine.sampler import SamplerConfig
     spec = fleet if fleet is not None else FleetSpec.homogeneous(n_workers)
-    controller = HeddleController(
-        predictor, InterferenceModel.analytic(config.kv_weight_ratio),
-        WorkerLatencyModel(t1=config.token_time), gpu_budget=spec.budget,
-        config=HeddleConfig(scheduler=config.scheduler, adaptive_resources=False,
-                            migration=config.migration,
-                            migration_load_gap=migration_load_gap,
-                            migration_cooldown_steps=migration_cooldown_steps,
-                            rank_hysteresis=rank_hysteresis),
-        max_workers=spec.n_workers)
+    controller = _make_controller(predictor, config, spec,
+                                  migration_load_gap=migration_load_gap,
+                                  migration_cooldown_steps=migration_cooldown_steps,
+                                  rank_hysteresis=rank_hysteresis)
     cap = max(capacity or 0, required_capacity(batch))
     if max(spec.degrees) > 1:            # KV capacity shards evenly on the model axis
         cap = -(-cap // max(spec.degrees)) * max(spec.degrees)
@@ -266,31 +301,60 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
     return RolloutRuntime(fleet_obj, controller, batch, env, config)
 
 
+def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
+               config: RuntimeConfig = RuntimeConfig(), *,
+               fleet: FleetSpec | None = None, migration_load_gap: int = 1,
+               migration_cooldown_steps: int = 1, rank_hysteresis: float = 0.2,
+               prompt_lens: dict[int, int] | None = None) -> OrchestratorResult:
+    """Run a runtime configuration on the analytic twin — no model, no engine.
+
+    Builds the exact controller ``make_runtime`` would and a ``SimBackend`` in
+    engine-parity mode (quantized decode priced with the engine's arithmetic,
+    admission charged to worker clocks), then drives the shared orchestrator.
+    With the same batch, predictor and config — and a latency-dominated or
+    infinite migration link — the scheduling/migration decision trace is
+    identical to the real engine's, which ``tests/test_orchestrator.py``
+    asserts and ``benchmarks/bench_rollout.py --backend sim`` exploits for
+    model-free policy sweeps.
+    """
+    spec = fleet if fleet is not None else FleetSpec.homogeneous(n_workers)
+    controller = _make_controller(predictor, config, spec,
+                                  migration_load_gap=migration_load_gap,
+                                  migration_cooldown_steps=migration_cooldown_steps,
+                                  rank_hysteresis=rank_hysteresis)
+    controller.degrees = list(spec.degrees)
+    lat = controller.latency
+    token_times = [config.token_time * lat.base_token_time(mp)
+                   / lat.base_token_time(1) for mp in spec.degrees]
+    backend = SimBackend(
+        list(spec.degrees), token_times, controller.interference,
+        prefill_speedup=config.prefill_speedup,
+        link_bandwidth=config.link_bandwidth,
+        latency_scale=config.tool_latency_scale,
+        quantum=config.quantum, prompt_lens=prompt_lens)
+    orch = Orchestrator(
+        backend, batch,
+        OrchestratorConfig(scheduler=config.scheduler, migration=config.migration,
+                           max_active=config.max_active,
+                           preemption_margin=config.preemption_margin,
+                           preemption_floor=config.preemption_floor,
+                           trace=config.trace),
+        controller=controller)
+    return orch.run()
+
+
 # ---------------------------------------------------------------- runtime
-
-class _WorkerState:
-    """One rollout worker's runtime view: engine + queue + active decode set."""
-
-    def __init__(self, wid: int, engine: RolloutWorker, scheduler_name: str,
-                 token_time: float = 0.02):
-        self.wid = wid
-        self.engine = engine
-        self.scheduler = make_scheduler(scheduler_name)
-        self.active: set[int] = set()    # traj_ids currently decoding
-        self.clock = 0.0                 # this worker's virtual time frontier
-        self.sleeping = True             # no worker_ready event in flight
-        self.token_time = token_time     # virtual s/token at batch 1 AT THIS MP
-
 
 class RolloutRuntime:
     """Drives real RolloutWorkers through full agentic trajectories, event-driven.
 
     The caller supplies the worker fleet — a ``RolloutFleet`` (heterogeneous MP,
-    reconfigurable between steps) or a bare worker list (uniform ``capacity`` —
-    migration moves lanes between pools) — a ``HeddleController`` with a fitted
-    predictor, the trajectory batch (``engine.workload`` plans, typically
-    ``miniaturize``d), and a ``ToolEnvironment``.  ``run()`` executes the batch
-    to completion and returns deterministic end-to-end metrics.
+    reconfigurable between steps) or a bare worker list — a ``HeddleController``
+    with a fitted predictor, the trajectory batch, and an environment exposing
+    ``step_outcome`` (plan-driven ``ToolEnvironment`` or a task adapter like
+    ``rl.loop.TaskEnvironment``).  ``run()`` builds the EngineBackend +
+    Orchestrator pair, executes the batch to completion and returns
+    deterministic end-to-end metrics.
 
     The fleet's per-worker MP degrees are the **single source of truth**: the
     controller's ``degrees`` vector is synced from them here (a pre-set
@@ -302,14 +366,15 @@ class RolloutRuntime:
     def __init__(self,
                  workers: list[RolloutWorker] | RolloutFleet,
                  controller: HeddleController,
-                 trajectories: list[Trajectory], tool_env: ToolEnvironment,
+                 trajectories: list[Trajectory], tool_env,
                  config: RuntimeConfig = RuntimeConfig(),
-                 prompts: dict[int, list[int]] | None = None):
+                 prompts: dict[int, list[int]] | None = None, *,
+                 stop_token: int | None = None,
+                 step_budget=None):
         self.cfg = config
         self.controller = controller
         self.env = tool_env
         self.trajs = list(trajectories)
-        self.by_id = {t.traj_id: t for t in self.trajs}
         self.prompts = prompts if prompts is not None \
             else synth_prompts(self.trajs, seed=config.seed)
         if isinstance(workers, RolloutFleet):
@@ -329,39 +394,31 @@ class RolloutRuntime:
                 f"fleet's MP degrees {list(self.spec.degrees)}; the fleet spec "
                 f"is the single source of truth — drop the manual assignment")
         controller.degrees = list(self.spec.degrees)
-        cap = min(w.capacity for w in engines)
-        need = required_capacity(self.trajs)
-        if need > cap:
-            raise ValueError(f"worker capacity {cap} < max trajectory context "
-                             f"{need}; raise capacity or miniaturize harder")
-        self.workers = self._worker_states(engines)
-        self.interference = controller.interference
-        # runtime lifecycle state
-        self.step_remaining: dict[int, int] = {}     # mid-step decode budget
-        self.pending_tool: dict[int, list[int]] = {} # tool output awaiting absorb
-        self.in_flight: dict[int, tuple[dict, int]] = {}  # migration (pkg, dst)
-        self.tool_arrived: set[int] = set()          # tool done while KV in flight
-        self.preemptions = 0
-        self.migrations = 0
-        self.total_tokens = 0
-        self.wall = 0.0
-        self._evq: list[tuple[float, int, str, int]] = []
-        self._seq = itertools.count()
+        planned = [t for t in self.trajs
+                   if isinstance(t.payload, TrajectoryPlan)]
+        if planned:
+            cap = min(w.capacity for w in engines)
+            need = required_capacity(planned)
+            if need > cap:
+                raise ValueError(f"worker capacity {cap} < max trajectory context "
+                                 f"{need}; raise capacity or miniaturize harder")
+        self.stop_token = stop_token
+        self.step_budget = step_budget
+        self.backend = self._make_backend(engines)
+        self._orch: Orchestrator | None = None
 
     # ------------------------------------------------------------ fleet pricing
-    def _worker_states(self, engines: list[RolloutWorker]) -> list[_WorkerState]:
-        """Runtime views (queue + clock + pricing) for a worker set — the ONE
-        place scheduler knobs are wired, so reconfigured fleets never drift
-        from freshly constructed ones."""
-        states = [
-            _WorkerState(w.worker_id, w, self.cfg.scheduler,
-                         token_time=self._token_time(w.mp))
-            for w in engines]
-        for ws in states:
-            if hasattr(ws.scheduler, "preemption_margin"):
-                ws.scheduler.preemption_margin = self.cfg.preemption_margin
-                ws.scheduler.preemption_floor = self.cfg.preemption_floor
-        return states
+    def _make_backend(self, engines: list[RolloutWorker]) -> EngineBackend:
+        """The ONE place engine pricing + environment are wired, so
+        reconfigured fleets never drift from freshly constructed ones."""
+        return EngineBackend(
+            engines, self.env, self.prompts,
+            interference=self.controller.interference,
+            quantum=self.cfg.quantum,
+            token_times=[self._token_time(w.mp) for w in engines],
+            prefill_speedup=self.cfg.prefill_speedup,
+            link_bandwidth=self.cfg.link_bandwidth,
+            stop_token=self.stop_token, step_budget=self.step_budget)
 
     def _token_time(self, mp: int) -> float:
         """Virtual s/token at batch 1 for MP degree ``mp``.
@@ -372,186 +429,15 @@ class RolloutRuntime:
         lat = self.controller.latency
         return self.cfg.token_time * lat.base_token_time(mp) / lat.base_token_time(1)
 
-    # ------------------------------------------------------------ event plumbing
-    def _push(self, t: float, kind: str, payload: int) -> None:
-        heapq.heappush(self._evq, (t, next(self._seq), kind, payload))
-
-    def _submit(self, traj: Trajectory, now: float) -> None:
-        """Queue the trajectory's next generation step on its current worker."""
-        ws = self.workers[traj.worker_id]
-        traj._queued_at = now
-        ws.scheduler.submit(traj, now)
-        if ws.sleeping:
-            ws.sleeping = False
-            self._push(max(now, ws.clock), "worker_ready", ws.wid)
-
-    # ------------------------------------------------------------ dispatch / preempt
-    def _start(self, ws: _WorkerState, traj: Trajectory, now: float) -> None:
-        tid = traj.traj_id
-        traj._step_queue_delay = getattr(traj, "_step_queue_delay", 0.0) \
-            + max(0.0, now - getattr(traj, "_queued_at", now))
-        if tid not in self.step_remaining:           # fresh step (not a resume)
-            plan: TrajectoryPlan = traj.payload
-            self.step_remaining[tid] = int(plan.gen_tokens[traj.num_steps])
-        traj.phase = TrajectoryPhase.GENERATING
-        ws.active.add(tid)
-
-    def _preempt(self, ws: _WorkerState, victim: Trajectory, now: float) -> None:
-        """Alg. 1 lines 5-10 on the real engine: evict, persist KV, requeue."""
-        tid = victim.traj_id
-        ws.engine.preempt(tid)                       # mask flip; lane stays resident
-        ws.active.discard(tid)                       # step_remaining persists: resume
-        victim.preemptions += 1                      # continues mid-step
-        self.preemptions += 1
-        victim.phase = TrajectoryPhase.PREEMPTED
-        victim._queued_at = now
-        ws.scheduler.submit(victim, now)
-
-    def _dispatch(self, ws: _WorkerState, now: float) -> None:
-        while len(ws.active) < self.cfg.max_active and len(ws.scheduler):
-            traj = ws.scheduler.pop(now)
-            if traj is None:
-                break
-            self._start(ws, traj, now)
-        if ws.scheduler.preemptive and len(ws.scheduler):
-            for _ in range(len(ws.active)):
-                victim = ws.scheduler.preempt_victim(
-                    [self.by_id[t] for t in ws.active])
-                if victim is None:
-                    break
-                self._preempt(ws, victim, now)
-                nxt = ws.scheduler.pop(now)
-                if nxt is not None:
-                    self._start(ws, nxt, now)
-
-    # ------------------------------------------------------------ decode quantum
-    def _on_worker_ready(self, ws: _WorkerState, now: float) -> None:
-        now = max(now, ws.clock)
-        self._dispatch(ws, now)
-        if not ws.active:
-            ws.sleeping = True
-            return
-        ids = sorted(ws.active)
-        q = min(self.cfg.quantum, min(self.step_remaining[t] for t in ids))
-        t0 = time.perf_counter()
-        out = ws.engine.decode(ids, q)               # REAL tokens into real lanes
-        self.wall += time.perf_counter() - t0
-        dt = q * ws.token_time * float(self.interference(len(ids)))
-        end = now + dt
-        ws.clock = end
-        for tid in ids:
-            got = len(out[tid])
-            self.total_tokens += got
-            self.step_remaining[tid] -= got
-            traj = self.by_id[tid]
-            traj._step_gen_time = getattr(traj, "_step_gen_time", 0.0) + dt
-            if self.step_remaining[tid] <= 0:
-                ws.active.discard(tid)
-                del self.step_remaining[tid]
-                self._complete_step(traj, ws, end)
-        self._dispatch(ws, end)                      # refill before the next quantum
-        if ws.active:
-            self._push(end, "worker_ready", ws.wid)
-        else:
-            ws.sleeping = True
-
-    # ------------------------------------------------------------ step lifecycle
-    def _complete_step(self, traj: Trajectory, ws: _WorkerState, now: float) -> None:
-        plan: TrajectoryPlan = traj.payload
-        s = traj.num_steps
-        terminal = s + 1 >= plan.num_steps
-        if terminal:
-            # the terminal step's tool ends the episode: record the plan's
-            # outcome for predictor-feature parity (harvest replays it too) but
-            # never invoke the environment — no tool actually runs
-            tool = ToolResult(float(plan.tool_latency[s]) * self.env.latency_scale,
-                              bool(plan.tool_failed[s]),
-                              [0] * int(plan.tool_output_tokens[s]))
-        else:
-            tool = self.env.invoke(traj, s)
-        traj.record_step(StepRecord(
-            s, int(plan.gen_tokens[s]), tool.latency, tool_failed=tool.failed,
-            tool_output_tokens=len(tool.output_tokens),
-            queue_delay=getattr(traj, "_step_queue_delay", 0.0),
-            gen_time=getattr(traj, "_step_gen_time", 0.0)))
-        traj._step_queue_delay = 0.0
-        traj._step_gen_time = 0.0
-        traj.record_tool_output(len(tool.output_tokens))
-        self.controller.record_worker_stats(ws.wid, ws.engine.dispatch_stats())
-        if terminal:
-            traj.finished = True
-            traj.finish_time = now
-            traj.phase = TrajectoryPhase.FINISHED
-            self.controller.on_finish(traj)
-            ws.engine.release(traj.traj_id)          # lane retires into radix cache
-            return
-        traj.phase = TrajectoryPhase.TOOL_CALL
-        self.pending_tool[traj.traj_id] = tool.output_tokens
-        self._push(now + tool.latency, "tool_done", traj.traj_id)
-        # progressive refresh + migration decision, masked by the tool interval
-        req = self.controller.on_step_complete(traj, ())
-        if req is not None and self.cfg.migration:
-            for r in self.controller.transmission.next_batch():
-                self._launch_migration(r, now)
-
-    # ------------------------------------------------------------ migration (§5.3)
-    def _launch_migration(self, req: MigrationRequest, now: float) -> None:
-        traj = self.by_id[req.traj_id]
-        if traj.phase is not TrajectoryPhase.TOOL_CALL or \
-                req.traj_id not in self.workers[req.src].engine.store:
-            # resumed, finished, or already moved: migrating now would stall the
-            # critical path — drop without touching load accounting
-            self.controller.transmission.complete(req.traj_id)
-            self.controller.abort_migration(req.traj_id)
-            return
-        pkg = self.workers[req.src].engine.migrate_out(req.traj_id)
-        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(pkg["cache"]))
-        self.controller.commit_migration(req.traj_id)
-        traj.phase = TrajectoryPhase.MIGRATING
-        traj.migrations += 1
-        self.migrations += 1
-        self.in_flight[req.traj_id] = (pkg, req.dst)
-        self._push(now + migration_time(nbytes, self.cfg.link_bandwidth),
-                   "migration_done", req.traj_id)
-
-    def _on_migration_done(self, tid: int, now: float) -> None:
-        pkg, dst = self.in_flight.pop(tid)
-        self.workers[dst].engine.migrate_in(pkg)     # lane lands in the new pool
-        traj = self.by_id[tid]
-        traj.worker_id = dst
-        self.controller.transmission.complete(tid)
-        for r in self.controller.transmission.next_batch():
-            self._launch_migration(r, now)
-        if tid in self.tool_arrived:                 # transfer outlived the tool
-            self.tool_arrived.discard(tid)
-            self._absorb_and_resume(traj, now)
-        else:                                        # fully masked by the tool call
-            traj.phase = TrajectoryPhase.TOOL_CALL
-
-    def _on_tool_done(self, tid: int, now: float) -> None:
-        if tid in self.in_flight:                    # KV still on the wire: wait
-            self.tool_arrived.add(tid)
-            return
-        self._absorb_and_resume(self.by_id[tid], now)
-
-    def _absorb_and_resume(self, traj: Trajectory, now: float) -> None:
-        # resuming invalidates any emitted-but-unlaunched migration: its target
-        # was chosen from now-stale load/rank data, and leaving it pending would
-        # both fire in some later tool interval and suppress fresh decisions
-        self.controller.abort_migration(traj.traj_id)
-        toks = self.pending_tool.pop(traj.traj_id, [])
-        if toks:                                     # chunked prefill into the lane
-            self.workers[traj.worker_id].engine.extend(traj.traj_id, toks)
-        self._submit(traj, now)
+    @property
+    def workers(self):
+        """Per-worker runtime views (``.wid``, ``.engine``, ``.token_time``)."""
+        return self.backend.views
 
     # ------------------------------------------------------------ run
     def run(self) -> RuntimeResult:
         cfg = self.cfg
         wall0 = time.perf_counter()
-        for t in self.trajs:
-            t.predicted_remaining = self.controller.predictor.predict(t)
-            t.priority = t.predicted_total
-            t.submit_time = 0.0
         # the fleet spec was synced to the controller at construction; anything
         # that mutated it since (a stale [1]*n stub, a partial reconfigure)
         # would silently misprice placement — fail loudly instead
@@ -560,55 +446,34 @@ class RolloutRuntime:
                 f"controller.degrees {self.controller.degrees} drifted from the "
                 f"fleet spec {list(self.spec.degrees)} between construction and "
                 f"run(); reconfigure() is the only sanctioned mutation path")
-        self.controller.initial_placement(self.trajs)
-        # admission: prefill each worker's group up front (lanes are memory; the
-        # scheduler gates decode *compute*).  Sibling-adjacent order maximizes
-        # radix-cache implants; admission cost lands on the worker's clock.
-        for ws in self.workers:
-            mine = [t for t in self.trajs if t.worker_id == ws.wid]
-            mine.sort(key=lambda t: (t.prompt_id, t.sample_id))
-            t0 = time.perf_counter()
-            for t in mine:
-                ws.engine.prefill(t.traj_id, self.prompts[t.traj_id])
-                ws.clock += len(self.prompts[t.traj_id]) * ws.token_time \
-                    / cfg.prefill_speedup
-            self.wall += time.perf_counter() - t0
-        for t in self.trajs:
-            self._submit(t, 0.0)
-
-        guard = 0
-        now = 0.0
-        while self._evq:
-            guard += 1
-            if guard > 2_000_000:
-                raise RuntimeError("runtime event budget exceeded")
-            now, _, kind, payload = heapq.heappop(self._evq)
-            if kind == "worker_ready":
-                self._on_worker_ready(self.workers[payload], now)
-            elif kind == "tool_done":
-                self._on_tool_done(payload, now)
-            elif kind == "migration_done":
-                self._on_migration_done(payload, now)
-
-        unfinished = [t.traj_id for t in self.trajs if not t.finished]
-        assert not unfinished, f"runtime drained with live trajectories {unfinished}"
-        for ws in self.workers:                      # final telemetry snapshot
-            self.controller.record_worker_stats(ws.wid, ws.engine.dispatch_stats())
-        makespan = max(t.finish_time for t in self.trajs)
-        delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
+        self._orch = Orchestrator(
+            self.backend, self.trajs,
+            OrchestratorConfig(scheduler=cfg.scheduler, migration=cfg.migration,
+                               max_active=cfg.max_active,
+                               preemption_margin=cfg.preemption_margin,
+                               preemption_floor=cfg.preemption_floor,
+                               max_events=2_000_000, trace=cfg.trace),
+            controller=self.controller)
+        res = self._orch.run()
+        for view in self.backend.views:              # final telemetry snapshot
+            self.controller.record_worker_stats(view.wid,
+                                                view.engine.dispatch_stats())
+        makespan = res.makespan
+        total = self.backend.total_tokens
         return RuntimeResult(
             makespan=makespan,
-            total_tokens=self.total_tokens,
-            throughput=self.total_tokens / makespan if makespan > 0 else 0.0,
-            preemptions=self.preemptions,
-            migrations=self.migrations,
-            queue_delay_mean=float(delays.mean()) if len(delays) else 0.0,
-            queue_delay_p99=float(np.quantile(delays, 0.99)) if len(delays) else 0.0,
+            total_tokens=total,
+            throughput=total / makespan if makespan > 0 else 0.0,
+            preemptions=res.preemptions,
+            migrations=res.migrations,
+            queue_delay_mean=res.queue_delay_mean,
+            queue_delay_p99=res.queue_delay_p99,
             trajectories=self.trajs,
             worker_stats=dict(self.controller.worker_stats),
             wall_time=time.perf_counter() - wall0,
-            events=guard,
+            events=res.events,
             degrees=list(self.spec.degrees),
+            trace=res.trace,
         )
 
     # ------------------------------------------------------------ §6 feedback loop
@@ -636,7 +501,7 @@ class RolloutRuntime:
         if self.fleet is None:
             raise ValueError("runtime was built from a bare worker list; "
                              "construct it with a RolloutFleet to reconfigure")
-        if self._evq:
+        if self._orch is not None and self._orch._evq:
             raise RuntimeError("reconfigure() during a live run: drain the "
                                "event queue first (call between steps)")
         if calibrate:
@@ -652,5 +517,5 @@ class RolloutRuntime:
         report = self.fleet.reconfigure(spec)
         self.spec = self.fleet.spec
         self.controller.degrees = list(self.spec.degrees)
-        self.workers = self._worker_states(self.fleet.workers)
+        self.backend = self._make_backend(self.fleet.workers)
         return report

@@ -1,15 +1,23 @@
-"""Discrete-event rollout-cluster simulator (processor-sharing continuous batching).
+"""Discrete-event rollout-cluster simulation = orchestrator + analytic backend.
 
 Evaluates orchestration policies at paper scale (64 accelerators, thousands of
 trajectories, 40K-token tails) where real 8B-32B decoding is impossible in this
-container.  The performance model follows the paper's own profiler-based methodology
-(§5.2): a worker running b concurrent trajectories advances each at per-token time
-``T_w * F(b)`` where ``T_w`` is the worker's MP-dependent base per-token time and F the
-profiled interference factor.  Prefill recompute on cache miss, preemption, migration
-during tool calls and the transmission scheduler are all modeled explicitly.
+container.  The performance model follows the paper's own profiler-based
+methodology (§5.2): a worker running b concurrent trajectories advances each at
+per-token time ``T_w * F(b)`` where ``T_w`` is the worker's MP-dependent base
+per-token time and F the profiled interference factor.  Prefill recompute on
+cache miss, preemption, migration during tool calls and the transmission
+scheduler are all modeled explicitly.
 
-Everything policy-like is pluggable so Heddle and the §7 baselines run on identical
-substrate:
+Since the control-plane unification there is no simulator-private event loop:
+``RolloutSimulator.run()`` wires the analytic cost models
+(``engine.backends.SimBackend``) into the one canonical
+``core.orchestrator.Orchestrator`` — the same loop that drives the real
+``RolloutWorker`` data plane — so every scheduling/preemption/migration
+decision here is made by exactly the code the engine runs.
+
+Everything policy-like is pluggable so Heddle and the §7 baselines run on
+identical substrate:
   scheduler:  pps | fcfs | rr | sjf                     (core.scheduler)
   placement:  heddle | cache_aware | least_load | hybrid (core.controller)
   resources:  adaptive (Algorithm 2) | fixed MP list
@@ -17,22 +25,18 @@ substrate:
 
 from __future__ import annotations
 
-import heapq
-import itertools
-import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.controller import (HeddleConfig, HeddleController, ROUTING_POLICIES)
-from repro.core.migration import MigrationRequest, kv_cache_bytes, migration_time
+from repro.core.controller import HeddleConfig, HeddleController, ROUTING_POLICIES
+from repro.core.orchestrator import Orchestrator, OrchestratorConfig
 from repro.core.placement import InterferenceModel
 from repro.core.predictor import ProgressivePredictor
 from repro.core.resource_manager import WorkerLatencyModel
-from repro.core.scheduler import make_scheduler
-from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
-from repro.engine.workload import TrajectoryPlan
+from repro.core.trajectory import Trajectory
+from repro.engine.backends import SimBackend
 
 
 @dataclass(frozen=True)
@@ -95,70 +99,9 @@ class SimResult:
     timeline: list[tuple[float, int]] = field(default_factory=list)  # (t, active count)
 
 
-class _Worker:
-    """Processor-sharing continuous-batching worker."""
-
-    def __init__(self, wid: int, mp: int, token_time: float,
-                 interference: InterferenceModel, max_batch: int, scheduler_name: str):
-        self.wid = wid
-        self.mp = mp
-        self.token_time = token_time      # t1 * ((1-o)/mp + o): control-plane view
-        self.t1 = None                    # set by RolloutSimulator (data-plane model)
-        self.comm_overlap = 0.0
-        self.comm_batch_coef = 0.0
-        self.interference = interference
-        self.max_batch = max_batch
-        self.scheduler = make_scheduler(scheduler_name)
-        self.version = 0                          # event-staleness guard
-        self.active: dict[int, float] = {}       # traj_id -> remaining token-work
-        self.trajs: dict[int, Trajectory] = {}
-        self.last_update = 0.0
-        self.tokens_done = 0.0
-        self.ctx_coef = 0.0                       # set by RolloutSimulator
-
-    # -- processor sharing mechanics ------------------------------------------
-    def rate(self) -> float:
-        """Seconds per token-unit for each active trajectory (all advance together).
-
-        Context-weighted interference: one decode step reads the weights once plus the
-        KV cache of every resident sequence, so per-token time grows with the *total
-        context tokens* in the batch, not just its size."""
-        b = len(self.active)
-        if b == 0:
-            return math.inf
-        total_ctx = sum(t.context_tokens for t in self.trajs.values())
-        if self.t1 is None:               # control-plane-identical fallback
-            return self.token_time * (self.interference(b) + self.ctx_coef * total_ctx)
-        o, g = self.comm_overlap, self.comm_batch_coef
-        scalable = (self.interference(b) + self.ctx_coef * total_ctx) / self.mp
-        comm = (o * (1.0 + g * b)) if self.mp > 1 else 0.0
-        return self.t1 * ((1.0 - o) * scalable + comm + (o / self.mp if self.mp == 1 else 0.0))
-
-    def advance(self, now: float) -> list[int]:
-        """Progress all active trajectories to ``now``; return finished traj_ids."""
-        dt = now - self.last_update
-        self.last_update = now
-        if not self.active or dt <= 0:
-            return []
-        per_tok = self.rate()
-        progressed = dt / per_tok
-        done = []
-        for tid in list(self.active):
-            self.active[tid] -= progressed
-            self.tokens_done += progressed
-            if self.active[tid] <= 1e-9:
-                done.append(tid)
-        return done
-
-    def next_completion(self, now: float) -> Optional[float]:
-        if not self.active:
-            return None
-        per_tok = self.rate()
-        rem = min(self.active.values())
-        return now + max(rem, 0.0) * per_tok
-
-
 class RolloutSimulator:
+    """Paper-scale policy studies on the unified orchestrator (SimBackend)."""
+
     def __init__(self, trajectories: Sequence[Trajectory], predictor: ProgressivePredictor,
                  config: SimConfig):
         self.cfg = config
@@ -179,282 +122,49 @@ class RolloutSimulator:
         self.routing = None
         if config.placement != "heddle":
             self.routing = ROUTING_POLICIES[config.placement]()
-        self.stats_migrations = 0
-        self.stats_preemptions = 0
-        self.stats_miss_tokens = 0
-
-    # ------------------------------------------------------------------ setup
-    def _make_workers(self) -> list[_Worker]:
-        cfg = self.cfg
-        degrees = list(cfg.degrees) if cfg.degrees else self.controller.provision(self.trajs)
-        workers = [
-            _Worker(i, mp, self.latency.base_token_time(mp), self.interference,
-                    cfg.max_batch, cfg.scheduler)
-            for i, mp in enumerate(degrees)
-        ]
-        for w in workers:
-            w.ctx_coef = cfg.ctx_interference
-            w.t1 = self.latency.t1
-            w.comm_overlap = cfg.comm_overlap
-            w.comm_batch_coef = cfg.comm_batch_coef
-        return workers
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
         cfg = self.cfg
-        workers = self._make_workers()
-        m = len(workers)
-        loads = np.zeros(m)
-        cache_home: dict[int, set[int]] = {}     # traj -> workers holding its prefix
-        prompt_home: dict[int, set[int]] = {}    # prompt -> workers holding its prompt
-        pending_tool: dict[int, float] = {}
-        migration_target: dict[int, int] = {}
-        migration_ready: dict[int, float] = {}
-
-        # --- initial placement -------------------------------------------------
-        for t in self.trajs:
-            t.predicted_remaining = self.predictor.predict(t)
-            t.priority = t.predicted_total
-            t.submit_time = 0.0
-        if cfg.placement == "heddle":
-            self.controller.degrees = [w.mp for w in workers]
-            self.controller.initial_placement(self.trajs)
-        else:
-            for t in self.trajs:
-                t.worker_id = self.routing.initial_worker(t, loads)
-                loads[t.worker_id] += 1
-
-        # --- event loop ----------------------------------------------------------
-        # events: (time, seq, kind, payload)
-        evq: list[tuple[float, int, str, int]] = []
-        seq = itertools.count()
-
-        def push(t, kind, tid):
-            heapq.heappush(evq, (t, next(seq), kind, tid))
-
-        def worker_loads() -> np.ndarray:
-            return np.asarray([len(w.active) + len(w.scheduler) for w in workers], float)
-
-        def submit_step(traj: Trajectory, now: float):
-            """Queue the next LLM generation step of ``traj`` on its worker."""
-            w = workers[traj.worker_id]
-            traj._queued_at = now
-            w.scheduler.submit(traj, now)
-            try_dispatch(w, now)
-
-        def step_work(traj: Trajectory) -> float:
-            """Token-work for the upcoming step: generation + prefill recompute.
-
-            Prefix-cache accounting: a worker holding the trajectory's own cache pays
-            only the new tool output; a worker that has served any *group sibling*
-            holds the shared prompt prefix (radix-cache reuse), so a fresh arrival
-            there pays context - prompt."""
-            plan: TrajectoryPlan = traj.payload
-            s = traj.num_steps
-            gen = plan.gen_tokens[s]
-            if traj.worker_id in cache_home.get(traj.traj_id, set()):
-                prefill_tokens = (traj.steps[-1].tool_output_tokens if traj.steps
-                                  else traj.prompt_tokens)
-            elif traj.worker_id in prompt_home.get(traj.prompt_id, set()):
-                # group-sibling arrival: the shared prompt is reusable.  Scale by
-                # the engine's measured radix-cache reuse rate when available
-                # instead of assuming the whole prompt implants.
-                rate = self.cfg.measured_reuse_rate
-                reusable = traj.prompt_tokens if rate is None \
-                    else rate * traj.prompt_tokens
-                prefill_tokens = max(traj.context_tokens - reusable,
-                                     traj.prompt_tokens // 8)
-                self.stats_miss_tokens += int(prefill_tokens)
-            else:
-                prefill_tokens = traj.context_tokens or traj.prompt_tokens
-                self.stats_miss_tokens += int(prefill_tokens)
-            return gen + prefill_tokens / cfg.prefill_speedup
-
-        def start(w: _Worker, traj: Trajectory, now: float):
-            for tid in w.advance(now):     # settle progress before batch size changes
-                done_traj = w.trajs.pop(tid)
-                del w.active[tid]
-                finish_step(done_traj, now)
-            traj.phase = TrajectoryPhase.GENERATING
-            qd = now - getattr(traj, "_queued_at", now)
-            traj._step_queue_delay = getattr(traj, "_step_queue_delay", 0.0) + qd
-            if getattr(traj, "_preempt_remaining", None) is not None:
-                w.active[traj.traj_id] = traj._preempt_remaining   # resume persisted work
-                traj._preempt_remaining = None
-            else:
-                w.active[traj.traj_id] = step_work(traj)
-            w.trajs[traj.traj_id] = traj
-            cache_home.setdefault(traj.traj_id, set()).add(w.wid)
-            prompt_home.setdefault(traj.prompt_id, set()).add(w.wid)
-            reschedule(w, now)
-
-        def reschedule(w: _Worker, now: float):
-            w.version += 1
-            nc = w.next_completion(now)
-            if nc is not None:
-                push(nc, "worker_check", (w.wid, w.version))
-
-        def try_dispatch(w: _Worker, now: float):
-            # fill free slots
-            while len(w.active) < w.max_batch and len(w.scheduler):
-                traj = w.scheduler.pop(now)
-                if traj is None:
-                    break
-                start(w, traj, now)
-            # preemptive execution (Algorithm 1 lines 5-10)
-            if w.scheduler.preemptive and len(w.scheduler):
-                active_trajs = [w.trajs[tid] for tid in w.active]
-                victim = w.scheduler.preempt_victim(active_trajs)
-                if victim is not None:
-                    w.advance(now)
-                    remaining = w.active.pop(victim.traj_id)
-                    w.trajs.pop(victim.traj_id)
-                    victim.preemptions += 1
-                    victim.phase = TrajectoryPhase.PREEMPTED
-                    victim._preempt_remaining = remaining
-                    self.stats_preemptions += 1
-                    victim._queued_at = now
-                    w.scheduler.submit(victim, now)
-                    nxt = w.scheduler.pop(now)
-                    if nxt is not None:
-                        start(w, nxt, now)
-                    reschedule(w, now)
-
-        def finish_step(traj: Trajectory, now: float):
-            """Generation step done -> record, launch tool, maybe migrate (§5.3)."""
-            plan: TrajectoryPlan = traj.payload
-            s = traj.num_steps
-            rec = StepRecord(s, plan.gen_tokens[s], plan.tool_latency[s],
-                             tool_failed=plan.tool_failed[s],
-                             tool_output_tokens=plan.tool_output_tokens[s],
-                             queue_delay=getattr(traj, "_step_queue_delay", 0.0))
-            traj._step_queue_delay = 0.0
-            traj.record_step(rec)
-            traj.record_tool_output(rec.tool_output_tokens)
-            if traj.num_steps >= plan.num_steps:
-                traj.finished = True
-                traj.finish_time = now
-                traj.phase = TrajectoryPhase.FINISHED
-                if cfg.placement == "heddle":
-                    self.controller.on_finish(traj)
-                return
-            traj.phase = TrajectoryPhase.TOOL_CALL
-            tool_end = now + rec.tool_latency
-            pending_tool[traj.traj_id] = tool_end
-            # progressive prediction refresh + migration decision (masked by tool call)
-            if cfg.placement == "heddle":
-                req = self.controller.on_step_complete(traj, ())
-                if req is not None and cfg.migration:
-                    for batch_req in self.controller.transmission.next_batch():
-                        launch_migration(batch_req, now)
-            else:
-                traj.predicted_remaining = self.predictor.predict(traj)
-                traj.priority = traj.predicted_total
-            push(tool_end, "tool_done", traj.traj_id)
-
-        def launch_migration(req: MigrationRequest, now: float):
-            if req.traj_id not in pending_tool:
-                # trajectory already resumed generating: migrating now would stall the
-                # critical path, so the router drops the request (paper §5.3 only
-                # migrates during tool intervals).  abort, not commit: the worker
-                # counts never moved for this request, so there is nothing to undo
-                self.controller.transmission.complete(req.traj_id)
-                self.controller.abort_migration(req.traj_id)
-                return
-            traj = traj_by_id[req.traj_id]
-            self.controller.commit_migration(req.traj_id)
-            kv = kv_cache_bytes(traj.context_tokens, cfg.model_layers,
-                                cfg.model_kv_heads, cfg.model_head_dim)
-            dur = migration_time(kv, cfg.link_bandwidth)
-            migration_target[req.traj_id] = req.dst
-            migration_ready[req.traj_id] = now + dur
-            self.stats_migrations += 1
-            traj.migrations += 1
-            push(now + dur, "migration_done", req.traj_id)
-
-        def tool_done(traj: Trajectory, now: float):
-            pending_tool.pop(traj.traj_id, None)
-            tid = traj.traj_id
-            if tid not in migration_target:
-                # resuming with an emitted-but-unlaunched migration: drop it —
-                # its target was chosen from now-stale load/rank data
-                self.controller.abort_migration(tid)
-            if tid in migration_target:
-                ready = migration_ready.get(tid, now)
-                if ready <= now:           # migration fully masked by the tool call
-                    traj.worker_id = migration_target.pop(tid)
-                    migration_ready.pop(tid, None)
-                    cache_home[tid] = {traj.worker_id}
-                else:
-                    # resume where the cache lives; re-dispatch when transfer lands
-                    push(ready, "migration_resume", tid)
-                    return
-            elif cfg.placement != "heddle":
-                w_new = self.routing.step_worker(traj, worker_loads())
-                traj.worker_id = w_new
-            submit_step(traj, now)
-
-        def migration_done(tid: int, now: float):
-            self.controller.transmission.complete(tid)
-            for batch_req in self.controller.transmission.next_batch():
-                launch_migration(batch_req, now)
-
-        def migration_resume(tid: int, now: float):
-            traj = traj_by_id[tid]
-            if tid in migration_target:
-                traj.worker_id = migration_target.pop(tid)
-                migration_ready.pop(tid, None)
-                cache_home[tid] = {traj.worker_id}
-            submit_step(traj, now)
-
-        traj_by_id = {t.traj_id: t for t in self.trajs}
-        for t in self.trajs:
-            submit_step(t, 0.0)
-
-        timeline = []
-        now = 0.0
-        guard = 0
-        while evq:
-            guard += 1
-            if guard > 5_000_000:
-                raise RuntimeError("simulator event budget exceeded")
-            now, _, kind, payload = heapq.heappop(evq)
-            if kind == "worker_check":
-                wid, ver = payload
-                w = workers[wid]
-                if ver != w.version:
-                    continue                      # stale event superseded by reschedule
-                for tid in w.advance(now):
-                    traj = w.trajs.pop(tid)
-                    del w.active[tid]
-                    finish_step(traj, now)
-                try_dispatch(w, now)
-                reschedule(w, now)
-            elif kind == "tool_done":
-                tool_done(traj_by_id[payload], now)
-            elif kind == "migration_done":
-                migration_done(payload, now)
-            elif kind == "migration_resume":
-                migration_resume(payload, now)
-            if guard % 256 == 0:
-                timeline.append((now, sum(1 for t in self.trajs if not t.finished)))
+        degrees = list(cfg.degrees) if cfg.degrees else self.controller.provision(self.trajs)
+        heddle = cfg.placement == "heddle"
+        if heddle:
+            self.controller.degrees = degrees
+        backend = SimBackend(
+            degrees, [self.latency.base_token_time(mp) for mp in degrees],
+            self.interference,
+            t1=self.latency.t1,
+            comm_overlap=cfg.comm_overlap, comm_batch_coef=cfg.comm_batch_coef,
+            ctx_interference=cfg.ctx_interference,
+            prefill_speedup=cfg.prefill_speedup,
+            measured_reuse_rate=cfg.measured_reuse_rate,
+            link_bandwidth=cfg.link_bandwidth,
+            kv_layers=cfg.model_layers, kv_heads=cfg.model_kv_heads,
+            kv_head_dim=cfg.model_head_dim)
+        orch = Orchestrator(
+            backend, self.trajs,
+            OrchestratorConfig(scheduler=cfg.scheduler, max_active=cfg.max_batch,
+                               migration=cfg.migration and heddle,
+                               max_events=5_000_000, timeline_every=256),
+            controller=self.controller if heddle else None,
+            routing=self.routing, predictor=self.predictor)
+        res = orch.run()
 
         assert all(t.finished for t in self.trajs), "simulation ended with live trajectories"
-        makespan = max(t.finish_time for t in self.trajs)
         total_tokens = sum(t.tokens_generated for t in self.trajs)
         delays = np.asarray([t.total_queue_delay for t in self.trajs])
         longest = max(self.trajs, key=lambda t: t.true_total_tokens)
         return SimResult(
-            makespan=makespan,
+            makespan=res.makespan,
             total_tokens=total_tokens,
-            throughput=total_tokens / makespan,
+            throughput=total_tokens / res.makespan,
             queue_delay_p100=longest.total_queue_delay,
             queue_delay_mean=float(delays.mean()),
-            migrations=self.stats_migrations,
-            preemptions=self.stats_preemptions,
-            cache_miss_prefill_tokens=self.stats_miss_tokens,
+            migrations=res.migrations,
+            preemptions=res.preemptions,
+            cache_miss_prefill_tokens=backend.miss_tokens,
             trajectories=self.trajs,
-            timeline=timeline,
+            timeline=res.timeline,
         )
 
 

@@ -43,19 +43,25 @@ TOOL_PROFILES: dict[str, ToolProfile] = {
 
 
 class ToolExecutor:
-    """Elastic executor: unlimited concurrency (serverless), pay-per-invocation."""
+    """Elastic executor: unlimited concurrency (serverless), pay-per-invocation.
+
+    Outcomes are seeded per ``(traj_id, step)``, NOT per call sequence: two
+    backends (or two scheduling orders) invoking the same trajectory's steps
+    must observe identical latencies/failures, and a shared sequential rng
+    would entangle every trajectory's outcome with global dispatch order."""
 
     def __init__(self, profile: ToolProfile, seed: int = 0):
         self.profile = profile
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.invocations = 0
         self.total_latency = 0.0
 
-    def invoke(self) -> tuple[float, bool, int]:
-        """Returns (latency_s, failed, output_tokens)."""
-        lat = float(self.profile.sample_latency(self.rng))
-        failed = bool(self.rng.random() < self.profile.fail_rate)
-        out = self.profile.sample_output_tokens(self.rng, failed)
+    def invoke(self, traj_id: int, step: int) -> tuple[float, bool, int]:
+        """Returns (latency_s, failed, output_tokens) for one (traj, step)."""
+        rng = np.random.default_rng((self.seed, traj_id, step))
+        lat = float(self.profile.sample_latency(rng))
+        failed = bool(rng.random() < self.profile.fail_rate)
+        out = self.profile.sample_output_tokens(rng, failed)
         self.invocations += 1
         self.total_latency += lat
         return lat, failed, out

@@ -38,7 +38,8 @@ def build_runtime(args, cfg, params):
     rcfg = RuntimeConfig(scheduler=args.scheduler,
                          migration=args.migration == "on",
                          max_active=args.max_active, quantum=args.quantum,
-                         tool_latency_scale=args.tool_latency, seed=args.seed)
+                         tool_latency_scale=args.tool_latency,
+                         trace=args.trace > 0, seed=args.seed)
     fleet = None
     if args.degrees:
         fleet = FleetSpec.from_degrees(
@@ -80,6 +81,10 @@ def main(argv=None):
     ap.add_argument("--max-tokens", type=int, default=48,
                     help="longest trajectory's total generated tokens")
     ap.add_argument("--capacity", type=int, default=160)
+    ap.add_argument("--trace", type=int, default=0,
+                    help="print the first N entries of the orchestrator's "
+                         "(event, traj, worker) decision trace — the sequence "
+                         "the sim/engine parity harness compares")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k",
@@ -129,6 +134,10 @@ def main(argv=None):
     print(f"preemptions {res.preemptions}, tool-interval migrations "
           f"{res.migrations}, tool invocations {runtime.env.invocations}, "
           f"measured prefix reuse rate {0.0 if rate is None else rate:.2f}")
+    if args.trace > 0:
+        print(f"\ndecision trace (first {args.trace} of {len(res.trace)}):")
+        for kind, tid, wid in res.trace[:args.trace]:
+            print(f"  {kind:12s} traj {tid:4d}  worker {wid}")
     return 0
 
 

@@ -1,10 +1,22 @@
 """End-to-end agentic RL training loop: Heddle-orchestrated rollout + GRPO updates.
 
 One training step (paper §2.2):
-  1. rollout — groups of trajectories per prompt, executed on real RolloutWorkers with
-     tool calls in the loop, placed/scheduled by the Heddle controller;
+  1. rollout — groups of trajectories per prompt, executed on real RolloutWorkers
+     with tool calls in the loop, driven by the unified orchestration stack
+     (``core.orchestrator`` + ``engine.backends.EngineBackend`` via
+     ``RolloutRuntime``): per-worker PPS queues, preemptive execution,
+     progressive prediction refresh, prefix-affine placement and tool-interval
+     migration — the same control plane the serving path runs, not a side-car
+     loop;
   2. inference — old-policy logprobs over the collected trajectories;
   3. training — GRPO update on the policy.
+
+The rollout→predictor feedback loop is closed the way the paper harvests
+history: each iteration's finished trajectories are appended to a bounded
+history and the ``ProgressivePredictor`` is refit on it, so scheduler
+priorities sharpen as training progresses (cold start uses a budget prior).
+Weight sync stays explicit: every rollout republishes ``self.params`` to the
+workers and ``reset_cache()`` drops stale-weight KV before admission.
 """
 
 from __future__ import annotations
@@ -13,10 +25,21 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.placement import InterferenceModel, place
+from repro.core.controller import HeddleConfig, HeddleController
+from repro.core.placement import InterferenceModel
+from repro.core.predictor import ProgressivePredictor
+from repro.core.resource_manager import WorkerLatencyModel
+from repro.core.trajectory import Trajectory
+from repro.engine.runtime import (
+    RolloutRuntime,
+    RuntimeConfig,
+    RuntimeResult,
+    ToolEnvironment,
+    ToolResult,
+)
 from repro.engine.sampler import SamplerConfig
+from repro.engine.tools import TOOL_PROFILES
 from repro.engine.worker import RolloutWorker
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -37,16 +60,89 @@ class RolloutRecord:
 class TrainerConfig:
     group_size: int = 4
     n_workers: int = 2
-    max_steps_per_traj: int = 3          # agentic steps (gen -> tool -> gen ...)
+    max_steps_per_traj: int = 3  # agentic steps (gen -> tool -> gen ...)
     gen_tokens_per_step: int = 8
     max_seq: int = 64
     capacity: int = 96
     lr: float = 5e-4
     seed: int = 0
+    # orchestration (the rollout phase runs the full Heddle control plane)
+    scheduler: str = "pps"
+    max_active: int = 2  # decode-concurrency slots per worker
+    quantum: int = 4  # decode tokens per scheduling quantum
+    migration: bool = True  # tool-interval KV migration (§5.3)
+    token_time: float = 0.02  # virtual s/token (scheduling clock)
+    history_cap: int = 512  # finished trajectories kept for refits
+
+
+class _PriorPredictor:
+    """Cold-start prior: a budget-sized total until any rollout history exists."""
+
+    def __init__(self, total_budget: float):
+        self.total = float(total_budget)
+
+    def predict(self, traj: Trajectory) -> float:
+        return max(self.total - traj.tokens_generated, 0.0)
+
+
+class TaskEnvironment(ToolEnvironment):
+    """Plan-less environment adapter: real task episodes under the orchestrator.
+
+    Terminality and tool outcomes come from the *task*, not a pre-rolled plan:
+    the episode ends on EOS, step budget exhaustion, or context-limit pressure;
+    a TOOL_CALL token triggers the task's tool (the calculator result tokens,
+    teacher-forced into the lane), with latency sampled from the task domain's
+    ``ToolProfile`` seeded per ``(traj, step)`` — identical for the same
+    trajectory under any backend or scheduling order.  Finished episodes are
+    collected as ``RolloutRecord``s for the GRPO update.
+    """
+
+    def __init__(
+        self,
+        tasks: dict[int, D.MathTask],
+        prompt_lens: dict[int, int],
+        *,
+        max_steps: int,
+        max_seq: int,
+        seed: int = 0,
+    ):
+        super().__init__(seed=seed, profile=TOOL_PROFILES["math"])
+        self.tasks = tasks
+        self.prompt_lens = prompt_lens
+        self.max_steps = max_steps
+        self.max_seq = max_seq
+        self.records: dict[int, RolloutRecord] = {}
+
+    def step_outcome(
+        self, traj: Trajectory, step: int, gen_tokens: list[int], context: list[int]
+    ) -> ToolResult:
+        tid = traj.traj_id
+        task = self.tasks[tid]
+        finished = (
+            D.EOS in gen_tokens
+            or step + 1 >= self.max_steps
+            or len(context) >= self.max_seq - 8
+        )
+        if finished:
+            plen = self.prompt_lens[tid]
+            self.records[tid] = RolloutRecord(
+                list(context), plen, task.reward(list(context[plen:])), step + 1
+            )
+            return ToolResult(0.0, False, [], terminal=True)
+        if D.TOOL_CALL in gen_tokens:
+            lat = self.sample_latency(tid, step)
+            self.invocations += 1
+            self.total_latency += lat
+            # calculator returns the sum token (masked from loss via
+            # teacher-forced extend; context grows, trajectory continues)
+            return ToolResult(lat, False, task.tool_result_tokens())
+        # no tool call: the trajectory thinks on — zero-latency requeue keeps
+        # it flowing through the scheduler like any other step boundary
+        return ToolResult(0.0, False, [])
 
 
 class HeddleTrainer:
-    """Small-scale but fully real: JAX model, tool loop, Heddle placement, GRPO."""
+    """Small-scale but fully real: JAX model, tool loop, Heddle orchestration, GRPO."""
 
     def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig = TrainerConfig()):
         self.cfg = cfg
@@ -55,104 +151,139 @@ class HeddleTrainer:
         self.params = M.init_params(cfg, key)
         self.opt = AdamW(lr=tcfg.lr)
         self.opt_state = self.opt.init(self.params)
-        self.train_step = jax.jit(make_train_step(cfg, GRPOConfig(
-            group_size=tcfg.group_size), self.opt))
-        self.interference = InterferenceModel.analytic(0.02)
+        grpo_cfg = GRPOConfig(group_size=tcfg.group_size)
+        self.train_step = jax.jit(make_train_step(cfg, grpo_cfg, self.opt))
+        step_budget_total = tcfg.max_steps_per_traj * tcfg.gen_tokens_per_step
+        self.predictor = _PriorPredictor(step_budget_total)
+        self.controller = HeddleController(
+            self.predictor,
+            InterferenceModel.analytic(0.02),
+            WorkerLatencyModel(t1=tcfg.token_time),
+            gpu_budget=tcfg.n_workers,
+            config=HeddleConfig(
+                scheduler=tcfg.scheduler,
+                adaptive_resources=False,
+                migration=tcfg.migration,
+                migration_load_gap=1,
+                migration_cooldown_steps=1,
+                rank_hysteresis=0.2,
+            ),
+            max_workers=tcfg.n_workers,
+        )
         self.workers = [
-            RolloutWorker(cfg, self.params, capacity=tcfg.capacity, worker_id=i,
-                          sampler=SamplerConfig(temperature=1.0, top_p=0.95),
-                          seed=tcfg.seed)
+            RolloutWorker(
+                cfg,
+                self.params,
+                capacity=tcfg.capacity,
+                worker_id=i,
+                sampler=SamplerConfig(temperature=1.0, top_p=0.95),
+                seed=tcfg.seed,
+            )
             for i in range(tcfg.n_workers)
         ]
+        self._history: list[Trajectory] = []
+        self.last_rollout: RuntimeResult | None = None
         self.step_count = 0
 
     # ------------------------------------------------------------------ rollout
     def rollout(self, tasks: list[D.MathTask]) -> list[RolloutRecord]:
         tcfg = self.tcfg
         for w in self.workers:
-            w.params = self.params                     # weight sync (colocated update)
-            w.reset_cache()      # drop resident AND retired KV: stale-weight prefixes
-                                 # must never be implanted into post-update admissions
-        # trajectory-aware placement: predicted length ~ prompt length heuristic at t=0
-        # (group_size samples per task, placed by the presorted DP)
-        n = len(tasks) * tcfg.group_size
-        lengths = [float(tcfg.max_steps_per_traj * tcfg.gen_tokens_per_step)] * n
-        placement = place(lengths, len(self.workers), self.interference)
-        assignment = np.zeros(n, int)
-        for wid, group in enumerate(placement.groups):
-            for idx in group:
-                assignment[idx] = wid
-
-        records: list[RolloutRecord] = []
-        sid = 0
-        live: list[tuple[int, D.MathTask, int, int]] = []   # (seq_id, task, worker, steps)
-        for task in tasks:
+            w.params = self.params  # weight sync (colocated update)
+            # drop resident AND retired KV: stale-weight prefixes must never
+            # be implanted into post-update admissions
+            w.reset_cache()
+        trajs: list[Trajectory] = []
+        prompts: dict[int, list[int]] = {}
+        tasks_by: dict[int, D.MathTask] = {}
+        for pid, task in enumerate(tasks):
+            ptoks = task.prompt_tokens()
             for g in range(tcfg.group_size):
-                wid = int(assignment[sid])
-                self.workers[wid].prefill(sid, task.prompt_tokens())
-                live.append((sid, task, wid, 0))
-                sid += 1
+                t = Trajectory(
+                    prompt_id=pid,
+                    sample_id=g,
+                    prompt_tokens=len(ptoks),
+                    context_tokens=len(ptoks),
+                )
+                trajs.append(t)
+                prompts[t.traj_id] = list(ptoks)
+                tasks_by[t.traj_id] = task
+        env = TaskEnvironment(
+            tasks_by,
+            {tid: len(p) for tid, p in prompts.items()},
+            max_steps=tcfg.max_steps_per_traj,
+            max_seq=tcfg.max_seq,
+            seed=tcfg.seed,
+        )
+        rcfg = RuntimeConfig(
+            scheduler=tcfg.scheduler,
+            migration=tcfg.migration,
+            max_active=tcfg.max_active,
+            quantum=tcfg.quantum,
+            token_time=tcfg.token_time,
+            seed=tcfg.seed,
+        )
+        runtime = RolloutRuntime(
+            self.workers,
+            self.controller,
+            trajs,
+            env,
+            rcfg,
+            prompts=prompts,
+            stop_token=D.EOS,
+            step_budget=lambda t: tcfg.gen_tokens_per_step,
+        )
+        self.last_rollout = runtime.run()
+        self._refit_predictor(trajs)
+        return [env.records[t.traj_id] for t in trajs]
 
-        prompt_lens = {s: len(t.prompt_tokens()) for s, t, _, _ in
-                       [(x[0], x[1], x[2], x[3]) for x in live]}
-        done: dict[int, RolloutRecord] = {}
-        for agent_step in range(tcfg.max_steps_per_traj):
-            next_live = []
-            by_worker: dict[int, list[int]] = {}
-            for s, task, wid, steps in live:
-                by_worker.setdefault(wid, []).append(s)
-            gen_out: dict[int, list[int]] = {}
-            for wid, seqs in by_worker.items():
-                gen_out.update(self.workers[wid].decode(seqs, tcfg.gen_tokens_per_step,
-                                                        stop_token=D.EOS))
-            for s, task, wid, steps in live:
-                gen = gen_out.get(s, [])
-                seq = self.workers[wid].store[s]
-                finished = (D.EOS in gen) or (agent_step == tcfg.max_steps_per_traj - 1) \
-                    or len(seq.tokens) >= tcfg.max_seq - 8
-                if D.TOOL_CALL in gen and not finished:
-                    # tool interval: calculator returns the sum token (masked from loss
-                    # via teacher-forced extend; context grows, trajectory continues)
-                    self.workers[wid].extend(s, task.tool_result_tokens())
-                    next_live.append((s, task, wid, steps + 1))
-                elif finished:
-                    reward = task.reward(seq.tokens[prompt_lens[s]:])
-                    done[s] = RolloutRecord(list(seq.tokens), prompt_lens[s], reward,
-                                            steps + 1)
-                    self.workers[wid].release(s)
-                else:
-                    next_live.append((s, task, wid, steps + 1))
-            live = next_live
-            if not live:
-                break
-        for s, task, wid, steps in live:
-            seq = self.workers[wid].store[s]
-            done[s] = RolloutRecord(list(seq.tokens), prompt_lens[s],
-                                    task.reward(seq.tokens[prompt_lens[s]:]), steps)
-            self.workers[wid].release(s)
-        return [done[s] for s in sorted(done)]
+    def _refit_predictor(self, trajectories: list[Trajectory]) -> None:
+        """Close the §4.1 loop: harvest this rollout, refit, sharpen priorities."""
+        for t in trajectories:
+            t.true_total_tokens = t.tokens_generated
+            t.true_num_steps = t.num_steps
+        self._history.extend(trajectories)
+        excess = len(self._history) - self.tcfg.history_cap
+        if excess > 0:
+            del self._history[:excess]
+        if len(self._history) >= 2 * self.tcfg.group_size:
+            self.predictor = ProgressivePredictor().fit_trajectories(self._history)
+            self.controller.predictor = self.predictor
 
     # ------------------------------------------------------------------ update
     def update(self, records: list[RolloutRecord]) -> dict:
         tcfg = self.tcfg
-        tokens, mask = D.pad_batch([r.tokens for r in records],
-                                   [r.prompt_len for r in records], tcfg.max_seq)
+        tokens, mask = D.pad_batch(
+            [r.tokens for r in records],
+            [r.prompt_len for r in records],
+            tcfg.max_seq,
+        )
         rewards = jnp.asarray([r.reward for r in records], jnp.float32)
         adv = group_advantages(rewards, tcfg.group_size)
-        batch = {"tokens": jnp.asarray(tokens), "loss_mask": jnp.asarray(mask),
-                 "advantages": adv}
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "loss_mask": jnp.asarray(mask),
+            "advantages": adv,
+        }
         # old-policy logprobs (inference phase)
         logits, _ = M.forward_full(self.cfg, self.params, {"tokens": batch["tokens"]})
-        batch["old_logprobs"] = jax.lax.stop_gradient(
-            token_logprobs(logits, batch["tokens"]))
+        old_logprobs = token_logprobs(logits, batch["tokens"])
+        batch["old_logprobs"] = jax.lax.stop_gradient(old_logprobs)
         self.params, self.opt_state, metrics = self.train_step(
-            self.params, self.opt_state, batch)
+            self.params, self.opt_state, batch
+        )
         self.step_count += 1
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics["mean_reward"] = float(rewards.mean())
+        if self.last_rollout is not None:
+            metrics["rollout_preemptions"] = float(self.last_rollout.preemptions)
+            metrics["rollout_migrations"] = float(self.last_rollout.migrations)
+            metrics["rollout_queue_delay_mean"] = self.last_rollout.queue_delay_mean
         return metrics
 
-    def train(self, n_iterations: int, tasks_per_iter: int = 4, seed: int = 0) -> list[dict]:
+    def train(
+        self, n_iterations: int, tasks_per_iter: int = 4, seed: int = 0
+    ) -> list[dict]:
         history = []
         for it in range(n_iterations):
             tasks = D.sample_tasks(tasks_per_iter, seed=seed + it)

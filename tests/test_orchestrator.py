@@ -1,0 +1,148 @@
+"""Unified orchestrator: sim-vs-engine decision-trace parity, backend contract,
+per-(traj, step) tool seeding, and the RL trainer's path through the stack."""
+
+import copy
+import math
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.engine.runtime import (RuntimeConfig, build_workbench, make_runtime,
+                                  run_on_sim)
+from repro.models import model as M
+
+SEED = 5          # the seeded long-tail workload bench_rollout pins
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm_135m").reduced(n_periods=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _parity_pair(cfg, params, migration: bool):
+    """Run one workload on the real engine and on its analytic twin.
+
+    An infinite migration link makes transfer time the pure base latency on
+    both sides (the engine prices *measured* lane bytes, the sim analytic KV
+    bytes — with finite bandwidth those differ and may reorder co-timed
+    events; decision parity is about scheduling, not the transfer-time model).
+    """
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    twin = copy.deepcopy(batch)
+    rcfg = RuntimeConfig(scheduler="pps", migration=migration, max_active=2,
+                         quantum=8, link_bandwidth=math.inf, trace=True,
+                         seed=SEED)
+    eng = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                       config=rcfg).run()
+    sim = run_on_sim(twin, predictor, n_workers=2, config=rcfg)
+    return eng, sim
+
+
+def test_decision_trace_parity_with_migration(setup):
+    """The tentpole invariant: same workload + same policy => the SimBackend
+    and the EngineBackend produce the IDENTICAL (event, traj, worker) decision
+    sequence — scheduling is a property of the policy, not the substrate."""
+    cfg, params = setup
+    eng, sim = _parity_pair(cfg, params, migration=True)
+    assert eng.preemptions > 0 and eng.migrations > 0   # the test must bite
+    assert len(eng.trace) == len(sim.trace) > 0
+    assert eng.trace == sim.trace
+    # identical decisions under identical pricing => identical virtual time
+    assert eng.makespan == sim.makespan
+    assert eng.preemptions == sim.preemptions
+    assert eng.migrations == sim.migrations
+
+
+def test_decision_trace_parity_migration_off(setup):
+    cfg, params = setup
+    eng, sim = _parity_pair(cfg, params, migration=False)
+    assert eng.migrations == sim.migrations == 0
+    assert eng.preemptions > 0
+    assert eng.trace == sim.trace
+    assert eng.makespan == sim.makespan
+
+
+def test_core_exports_orchestrator_api():
+    """core's public API includes the orchestrator/backend seam."""
+    import repro.core as core
+
+    for name in ("Orchestrator", "OrchestratorConfig", "OrchestratorResult",
+                 "ExecutionBackend", "StepOutcome"):
+        assert hasattr(core, name), name
+        assert name in core.__all__
+
+
+def test_simulate_and_runtime_share_the_loop():
+    """Both public entry points must drive core.orchestrator (no twin loops)."""
+    import inspect
+
+    from repro.engine import runtime, simulator
+
+    assert "Orchestrator" in inspect.getsource(simulator.RolloutSimulator.run)
+    assert "Orchestrator" in inspect.getsource(runtime.RolloutRuntime.run)
+    assert not hasattr(runtime.RolloutRuntime, "_on_worker_ready")
+
+
+# ------------------------------------------------- tool seeding (regression)
+
+def test_tool_environment_latency_independent_of_invocation_order():
+    """Regression: sampled tool latencies must be seeded per (traj, step), not
+    per call sequence — two backends interleaving the batch differently (or a
+    different scheduling order) must observe identical latencies."""
+    from repro.engine.runtime import ToolEnvironment
+
+    a = ToolEnvironment(seed=7)
+    b = ToolEnvironment(seed=7)
+    # a: trajectory 3 first; b: lots of other traffic first, then trajectory 3
+    lat_a = [a.sample_latency(3, s) for s in range(4)]
+    for other in (11, 12, 13):
+        for s in range(4):
+            b.sample_latency(other, s)
+    lat_b = [b.sample_latency(3, s) for s in reversed(range(4))]
+    assert lat_a == list(reversed(lat_b))
+    assert len(set(lat_a)) > 1                       # distinct streams per step
+
+
+def test_tool_executor_seeded_per_traj_step():
+    """Regression: ToolExecutor used one sequential rng — outcome depended on
+    global invocation order across trajectories."""
+    from repro.engine.tools import TOOL_PROFILES, ToolExecutor
+
+    x = ToolExecutor(TOOL_PROFILES["coding"], seed=3)
+    y = ToolExecutor(TOOL_PROFILES["coding"], seed=3)
+    first = x.invoke(traj_id=5, step=0)
+    x.invoke(traj_id=6, step=0)                      # interleaved other traffic
+    for _ in range(3):
+        y.invoke(traj_id=9, step=2)
+    assert y.invoke(traj_id=5, step=0) == first
+    assert x.invoke(traj_id=5, step=1) != first      # per-step streams differ
+
+
+# ------------------------------------------------- RL training on the stack
+
+def test_trainer_rollout_runs_through_the_orchestrator(setup):
+    """HeddleTrainer.rollout() is no longer a static side-car loop: its
+    trajectories flow through real scheduler queues (nonzero queue delay) and,
+    once the predictor has history, preemptive execution engages."""
+    import repro.rl.data as D
+    from repro.rl.loop import HeddleTrainer, TrainerConfig
+
+    cfg, _ = setup
+    tr = HeddleTrainer(cfg, TrainerConfig(group_size=4, n_workers=2, seed=0))
+    total_preempt = 0
+    for it in range(2):
+        records = tr.rollout(D.sample_tasks(4, seed=1_000 + it))
+        assert len(records) == 16
+        ro = tr.last_rollout
+        assert ro is not None
+        assert ro.queue_delay_mean > 0.0             # real queueing happened
+        assert all(t.finished for t in ro.trajectories)
+        assert all(t.worker_id is not None for t in ro.trajectories)
+        total_preempt += ro.preemptions
+        tr.update(records)
+    # after the first refit the progressive predictions differentiate the
+    # batch and Algorithm 1's preemptive execution engages
+    assert total_preempt > 0

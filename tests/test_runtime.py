@@ -28,9 +28,13 @@ def setup():
 
 def _run(cfg, params, scheduler, migration):
     batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
-    rcfg = RuntimeConfig(scheduler=scheduler, migration=migration, max_active=1,
-                         quantum=8, preemption_margin=1.5, preemption_floor=16.0,
-                         seed=SEED)
+    # default preemption hysteresis: the unified orchestrator drains co-timed
+    # tool returns before dispatching a quantum boundary, so dispatch picks the
+    # true priority winner up front and preemption only corrects genuine
+    # mid-step rank inversions (the old loop's 16-token floor was tuned for its
+    # dispatch-ahead-of-arrivals ordering)
+    rcfg = RuntimeConfig(scheduler=scheduler, migration=migration, max_active=2,
+                         quantum=8, seed=SEED)
     return make_runtime(cfg, params, batch, predictor, n_workers=2,
                         config=rcfg).run()
 
@@ -194,6 +198,33 @@ def test_migration_commits_on_execution_not_on_emission():
     assert ctrl._worker_count.tolist() == [11, 5]
     ctrl.commit_migration(t.traj_id)           # double-commit: no-op
     assert ctrl._worker_count.tolist() == [11, 5]
+
+
+def test_migration_gate_is_speed_aware_on_heterogeneous_fleets():
+    """Regression: the load-feedback gate compared raw live COUNTS, so on a
+    heterogeneous fleet it happily parked long tails on an 'idle' mp=1 worker
+    that a busier mp=4 worker would still drain sooner.  Loads are now counts
+    in fast-worker equivalents (count * relative token time)."""
+    ctrl, trajs = _controller(workers=2)
+    ctrl.degrees = [4, 1]                      # fast worker 0, slow worker 1
+    ctrl.initial_placement(trajs)
+    tts = ctrl.latency.token_times([4, 1])
+    assert ctrl._load_weight[1] / ctrl._load_weight[0] == pytest.approx(
+        tts[1] / tts[0])
+    # a raw-count gap of 8 vs 4: the count gate would migrate 0 -> 1, but in
+    # fast-equivalents the slow worker already carries the heavier load
+    ctrl._worker_count[:] = [8, 4]
+    loads = ctrl._worker_count * ctrl._load_weight
+    assert loads[1] > loads[0]
+    t = next(x for x in trajs if x.worker_id == 0)
+    t.predicted_remaining = 50.0
+    assert ctrl.on_step_complete(t, ()) is None   # slow target: gated
+    # homogeneous degrees reduce to the old pure-count behavior
+    ctrl2, trajs2 = _controller(workers=2)
+    ctrl2._worker_count[:] = [8, 4]
+    t2 = next(x for x in trajs2 if x.worker_id == 0)
+    t2.predicted_remaining = 50.0
+    assert ctrl2.on_step_complete(t2, ()) is not None
 
 
 def test_aborted_migration_leaks_nothing():
