@@ -1,0 +1,202 @@
+"""Failure-realism benchmark: seeded chaos on the unified orchestrator.
+
+Runs the same long-tail agentic workload as ``bench_rollout`` under a
+deterministic :class:`repro.core.faults.FaultPlan` — one mid-run worker death
+(every resident lane lost, trajectories re-admitted on survivors from their
+tool-boundary checkpoints), a later revival, and injected tool timeouts /
+transient errors absorbed by the capped-backoff retry discipline — and
+measures what failure handling actually costs:
+
+  * **recovery overhead** — chaos vs no-fault makespan for the same policy on
+    the same substrate (the price of a death + ≥10% tool fault injection);
+  * **goodput vs fault rate** — tokens per virtual second as the injected
+    tool-fault rate sweeps up (analytic backend: the sweep is decision-level);
+  * **PPS+migration vs FCFS under chaos** — the paper's headline comparison
+    must survive failure realism, not just the happy path.
+
+Both execution backends run the same seeded fault schedule through the one
+orchestrator, so a chaos run makes identical fault decisions on either
+substrate.  ``--smoke`` (CI) asserts every trajectory still reaches FINISHED
+under chaos on BOTH backends with the expected death/recovery/injection
+telemetry.  Emits ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_faults.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+
+from benchmarks.common import emit
+
+SEED = 5
+
+# (n_prompts, group_size, max_active): same shapes as bench_rollout
+FULL = (12, 4, 2)
+SMOKE = (6, 4, 2)
+
+# injected tool-fault sweep for the goodput curve: (timeout_rate, error_rate)
+RATE_SWEEP = [(0.0, 0.0), (0.05, 0.025), (0.10, 0.05), (0.20, 0.10),
+              (0.40, 0.20)]
+
+
+def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int):
+    from repro.engine.runtime import RuntimeConfig
+    return RuntimeConfig(scheduler=scheduler, migration=migration,
+                         max_active=max_active, quantum=8, seed=seed)
+
+
+def run_case(cfg, params, scheduler: str, migration: bool, shape, seed: int,
+             backend: str = "engine", faults=None) -> dict:
+    """One (policy, backend, fault-plan) rollout; returns flat metrics."""
+    from repro.engine.runtime import build_workbench, make_runtime, run_on_sim
+    n_prompts, group, max_active = shape
+    batch, predictor = build_workbench(n_prompts=n_prompts, group_size=group,
+                                       seed=seed)
+    rcfg = _runtime_config(scheduler, migration, max_active, seed)
+    if backend == "sim":
+        res = run_on_sim(batch, predictor, n_workers=2, config=rcfg,
+                         faults=faults)
+    else:
+        res = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                           config=rcfg, faults=faults).run()
+    tokens = sum(t.tokens_generated for t in res.trajectories)
+    return {
+        "makespan_s": res.makespan,
+        "goodput_tok_s": tokens / res.makespan if res.makespan else 0.0,
+        "total_tokens": tokens,
+        "queue_delay_p99_s": res.queue_delay_p99,
+        "preemptions": res.preemptions,
+        "migrations": res.migrations,
+        "worker_deaths": res.worker_deaths,
+        "recoveries": res.recoveries,
+        "tool_retries": res.tool_retries,
+        "injected_tool_faults": res.injected_tool_faults,
+        "finished": sum(t.finished for t in res.trajectories),
+        "trajectories": len(res.trajectories),
+    }
+
+
+def chaos_plan(seed: int, horizon: float):
+    from repro.core.faults import FaultPlan
+    return FaultPlan.chaos(seed=seed, n_workers=2, horizon=horizon)
+
+
+def run(smoke: bool = False, seed: int = SEED,
+        json_path: str = "BENCH_faults.json") -> dict:
+    shape = SMOKE if smoke else FULL
+    import jax
+    from repro.configs import get_config
+    from repro.core.faults import FaultPlan
+    from repro.models import model as M
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # ---- recovery overhead + policy comparison under chaos, both backends.
+    # The no-fault PPS run doubles as the horizon estimate the death is
+    # scheduled against (kill at 40% of the clean makespan).
+    per_backend: dict[str, dict] = {}
+    for backend in ("engine", "sim"):
+        clean = run_case(cfg, params, "pps", True, shape, seed, backend)
+        faults = chaos_plan(seed, clean["makespan_s"])
+        chaos = run_case(cfg, params, "pps", True, shape, seed, backend,
+                         faults=copy.deepcopy(faults))
+        fcfs_chaos = run_case(cfg, params, "fcfs", False, shape, seed, backend,
+                              faults=copy.deepcopy(faults))
+        per_backend[backend] = {
+            "no_fault_pps": clean,
+            "chaos_pps_migration": chaos,
+            "chaos_fcfs_baseline": fcfs_chaos,
+            "recovery_overhead": chaos["makespan_s"] / clean["makespan_s"],
+            "chaos_speedup_pps_vs_fcfs": (fcfs_chaos["makespan_s"]
+                                          / chaos["makespan_s"]),
+            "fault_plan": {
+                "deaths": list(faults.deaths), "revivals": list(faults.revivals),
+                "tool_timeout_rate": faults.tool_timeout_rate,
+                "tool_error_rate": faults.tool_error_rate,
+            },
+        }
+
+    results: dict = {
+        "workload": {
+            "task": "coding", "seed": seed, "n_prompts": shape[0],
+            "group_size": shape[1], "trajectories": shape[0] * shape[1],
+            "workers": 2, "max_active_per_worker": shape[2],
+        },
+        "backends": per_backend,
+    }
+
+    if not smoke:
+        # ---- goodput vs injected tool-fault rate (analytic backend: the
+        # curve is a decision-level property, and the sweep stays cheap)
+        base = per_backend["sim"]["no_fault_pps"]["makespan_s"]
+        sweep = []
+        for timeout_rate, error_rate in RATE_SWEEP:
+            plan = FaultPlan(seed=seed, tool_timeout_rate=timeout_rate,
+                             tool_error_rate=error_rate)
+            r = run_case(cfg, params, "pps", True, shape, seed, "sim",
+                         faults=plan if plan.injects_tool_faults else None)
+            sweep.append({"tool_timeout_rate": timeout_rate,
+                          "tool_error_rate": error_rate,
+                          "makespan_s": r["makespan_s"],
+                          "goodput_tok_s": r["goodput_tok_s"],
+                          "injected_tool_faults": r["injected_tool_faults"],
+                          "slowdown_vs_clean": r["makespan_s"] / base})
+        results["goodput_vs_fault_rate"] = sweep
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+
+    eng = per_backend["engine"]
+    emit([
+        ("faults_makespan_no_fault", eng["no_fault_pps"]["makespan_s"] * 1e6,
+         f"{eng['no_fault_pps']['goodput_tok_s']:.1f} tok/s"),
+        ("faults_makespan_chaos", eng["chaos_pps_migration"]["makespan_s"] * 1e6,
+         f"{eng['chaos_pps_migration']['goodput_tok_s']:.1f} tok/s"),
+        ("faults_recovery_overhead", 0.0, f"{eng['recovery_overhead']:.3f}x"),
+        ("faults_chaos_speedup_pps_vs_fcfs", 0.0,
+         f"{eng['chaos_speedup_pps_vs_fcfs']:.3f}x"),
+        ("faults_recoveries", 0.0, eng["chaos_pps_migration"]["recoveries"]),
+        ("faults_injected_tool_faults", 0.0,
+         eng["chaos_pps_migration"]["injected_tool_faults"]),
+    ] + ([("faults_goodput_at_max_rate", 0.0,
+           f"{results['goodput_vs_fault_rate'][-1]['goodput_tok_s']:.1f} tok/s")]
+         if "goodput_vs_fault_rate" in results else []))
+
+    if smoke:
+        # enforced invariants: under a seeded worker death + >=10% injected
+        # tool timeouts, every trajectory still drains to FINISHED on both
+        # backends, recovery actually happened, and faults were really injected
+        for backend, r in per_backend.items():
+            chaos = r["chaos_pps_migration"]
+            assert chaos["finished"] == chaos["trajectories"], \
+                f"{backend}: chaos left live trajectories"
+            assert chaos["worker_deaths"] == 1, f"{backend}: no death injected"
+            assert chaos["recoveries"] > 0, f"{backend}: nothing recovered"
+            assert chaos["injected_tool_faults"] > 0, \
+                f"{backend}: no tool faults injected"
+            assert chaos["makespan_s"] > r["no_fault_pps"]["makespan_s"], \
+                f"{backend}: chaos was free — injection not engaged"
+            fcfs = r["chaos_fcfs_baseline"]
+            assert fcfs["finished"] == fcfs["trajectories"], \
+                f"{backend}: FCFS chaos left live trajectories"
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shape + assert all trajectories finish under "
+                         "seeded chaos on both backends (CI)")
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--json", default="BENCH_faults.json")
+    args = ap.parse_args(argv)
+    emit([], header=True)
+    run(smoke=args.smoke, seed=args.seed, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

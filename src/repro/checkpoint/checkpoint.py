@@ -1,41 +1,80 @@
-"""Pytree checkpointing (npz + structure manifest, no external deps)."""
+"""Pytree checkpointing (npz + structure manifest, no external deps).
+
+``save`` is crash-atomic: the three files are written into a fresh temp
+directory next to the target and swapped into place with ``os.replace``, so a
+crash mid-save leaves either the previous complete checkpoint or none — never
+a half-written directory that ``restore`` would half-load.  ``restore``
+validates both shape *and* dtype against the checkpoint (a silent cast of,
+e.g., bf16 KV lanes into f32 templates corrupts restored state undetected).
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
 
 import jax
 import numpy as np
 
 
 def save(path: str, tree, step: int = 0, extra: dict | None = None) -> None:
-    os.makedirs(path, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
-    np.savez(os.path.join(path, "leaves.npz"),
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    # stage in a sibling temp dir (same filesystem, so the final rename is the
+    # single atomic commit point); a stable suffix keeps retries self-cleaning
+    tmp = os.path.abspath(path).rstrip(os.sep) + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "leaves.npz"),
              **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
     manifest = {"n_leaves": len(leaves), "treedef": str(treedef), "step": step,
                 "extra": extra or {}}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     # structure file for restore: we re-flatten the caller's template on load, so we
     # only need leaf order + dtype/shape validation data
-    with open(os.path.join(path, "shapes.json"), "w") as f:
+    with open(os.path.join(tmp, "shapes.json"), "w") as f:
         json.dump([[list(np.asarray(x).shape), str(np.asarray(x).dtype)]
                    for x in leaves], f)
+    target = os.path.abspath(path).rstrip(os.sep)
+    if os.path.isdir(target):  # os.replace cannot clobber a non-empty dir
+        old = target + ".old"
+        if os.path.isdir(old):
+            shutil.rmtree(old)
+        os.replace(target, old)
+        os.replace(tmp, target)
+        shutil.rmtree(old)
+    else:
+        os.replace(tmp, target)
 
 
 def restore(path: str, template):
-    """Restore into the structure of ``template`` (shape/dtype validated)."""
+    """Restore into the structure of ``template`` (shape AND dtype validated).
+
+    A dtype mismatch raises instead of silently casting: ``shapes.json``
+    records the dtype each leaf was saved with, and loading those bytes into a
+    template of another dtype is state corruption, not a convenience.
+    """
     data = np.load(os.path.join(path, "leaves.npz"))
     leaves, treedef = jax.tree.flatten(template)
     if len(leaves) != len(data.files):
         raise ValueError(f"checkpoint has {len(data.files)} leaves, template {len(leaves)}")
+    with open(os.path.join(path, "shapes.json")) as f:
+        saved = json.load(f)
     new_leaves = []
     for i, leaf in enumerate(leaves):
         arr = data[f"leaf_{i}"]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"leaf {i}: checkpoint {arr.shape} != template {np.shape(leaf)}")
+        want = np.dtype(getattr(leaf, "dtype", None) or np.asarray(leaf).dtype)
+        have = np.dtype(saved[i][1]) if i < len(saved) else arr.dtype
+        if have != want:
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {have} != template dtype {want}; "
+                "refusing to cast silently — convert explicitly if intended")
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree.unflatten(treedef, new_leaves)
 

@@ -7,6 +7,8 @@
   migration         — scaled-capacity re-placement + transmission scheduler (§5.3)
   resource_manager  — sort-initialized simulated annealing, Algorithm 2 (§6.2)
   controller        — control plane + baseline routing policies (§3, §7)
+  faults            — deterministic chaos schedules + tool retry discipline
+                      (worker death/revival, injected tool timeouts/errors)
   orchestrator      — THE event loop: one lifecycle state machine driving a
                       pluggable ExecutionBackend (engine.backends: the analytic
                       SimBackend and the real-worker EngineBackend), so every
@@ -14,6 +16,8 @@
                       exactly one code path on either substrate
 """
 
+from repro.core.faults import (FaultPlan, RetryPolicy, ToolCallTrace,
+                               resolve_tool_call)
 from repro.core.migration import (MigrationRequest, ScaledCapacityRouter,
                                   TransmissionScheduler, kv_cache_bytes)
 from repro.core.orchestrator import (ExecutionBackend, Orchestrator,

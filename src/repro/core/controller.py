@@ -126,6 +126,7 @@ class HeddleController:
         # the transfer actually launches (commit_migration) — emitting a request the
         # transmission scheduler later drops must not leak worker counts
         self._pending_migration: dict[int, MigrationRequest] = {}
+        self._dead_workers: set[int] = set()  # fault layer: no placements here
 
     # ------------------------------------------------------------ telemetry (measured)
     def record_worker_stats(self, worker_id: int, stats: dict) -> None:
@@ -313,7 +314,11 @@ class HeddleController:
         # fast-worker equivalents (count * relative token time): on a
         # heterogeneous fleet an "idle" mp=1 worker is NOT a good home for a
         # tail that a busy mp=4 worker would still drain sooner.
-        loads = self._worker_count * self._load_weight
+        loads = (self._worker_count * self._load_weight).astype(float)
+        if self._dead_workers:
+            # a dead worker must never win the window argmin (inf on the loads
+            # array, NOT an inf load weight: inf * 0 residents would be nan)
+            loads[list(self._dead_workers)] = np.inf
         lo, hi = max(0, target - 2), min(len(self._worker_count), target + 3)
         target = lo + int(np.argmin(loads[lo:hi]))
         # material-benefit gate: a migration must buy a real interference reduction
@@ -374,6 +379,33 @@ class HeddleController:
         if getattr(self, "_worker_count", None) is not None and traj.worker_id is not None \
                 and traj.worker_id < len(self._worker_count):
             self._worker_count[traj.worker_id] -= 1
+
+    # ------------------------------------------------------------ faults (elasticity)
+    def mark_worker_dead(self, worker_id: int) -> None:
+        """Worker died: exclude it from every future placement decision.
+
+        Its residents are recovered one by one via :meth:`on_recover`, which
+        moves the load accounting; the count left here is whatever the
+        orchestrator has not yet re-admitted."""
+        self._dead_workers.add(worker_id)
+
+    def mark_worker_alive(self, worker_id: int) -> None:
+        """Replacement capacity joined for slot ``worker_id`` (cold cache)."""
+        self._dead_workers.discard(worker_id)
+
+    def on_recover(self, traj: Trajectory, dst: int) -> None:
+        """A checkpoint restore re-admitted ``traj`` on ``dst``: move its load.
+
+        Mirrors ``commit_migration``'s accounting for the recovery path; any
+        pending migration for the trajectory is stale (its src is gone)."""
+        self.abort_migration(traj.traj_id)
+        if getattr(self, "_worker_count", None) is None:
+            return
+        src = traj.worker_id
+        if src is not None and src < len(self._worker_count):
+            self._worker_count[src] -= 1
+        if dst < len(self._worker_count):
+            self._worker_count[dst] += 1
 
     def _predicted_lengths(self, trajectories: Sequence[Trajectory]) -> np.ndarray:
         for t in trajectories:

@@ -41,6 +41,7 @@ from typing import Iterable, Optional, Protocol, Sequence
 
 import numpy as np
 
+from repro.core.faults import FaultPlan
 from repro.core.scheduler import make_scheduler
 from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase
 
@@ -53,6 +54,10 @@ class StepOutcome:
     simulator, decoded tokens for the engine), ``terminal`` ends the episode,
     and the ``tool_*`` fields describe the tool call the step triggered (for a
     terminal step they are recorded but no tool interval is waited out).
+    ``tool_failed`` is the *plan-driven* task-level failure (rectification
+    signal); ``tool_attempts``/``tool_injected_faults`` account the chaos
+    layer's injected timeouts/errors separately — the two channels must never
+    be conflated (the predictor's features consume only the former).
     """
 
     gen_tokens: int
@@ -61,6 +66,8 @@ class StepOutcome:
     tool_failed: bool
     tool_output_tokens: int
     gen_time: float = 0.0
+    tool_attempts: int = 1
+    tool_injected_faults: int = 0
 
 
 class ExecutionBackend(Protocol):
@@ -129,6 +136,26 @@ class ExecutionBackend(Protocol):
         """Measured telemetry snapshot for ``wid`` ({} when nothing measured)."""
         ...
 
+    # ---- failure realism (fault injection / recovery; see docs/runtime.md) ----
+
+    def checkpoint(self, traj: Trajectory) -> None:
+        """Snapshot the trajectory's state at a tool boundary (restore source)."""
+        ...
+
+    def restore(self, traj: Trajectory, dst: int) -> float:
+        """Re-admit the trajectory on ``dst`` from its last tool-boundary
+        checkpoint (the prompt when it never completed a step); returns the
+        virtual seconds the re-admission transfer costs."""
+        ...
+
+    def kill(self, wid: int) -> None:
+        """Worker ``wid`` died: drop every resident lane and all mid-step state."""
+        ...
+
+    def revive(self, wid: int) -> None:
+        """Replacement capacity for slot ``wid`` joined (cold cache)."""
+        ...
+
 
 @dataclass(frozen=True)
 class OrchestratorConfig:
@@ -153,6 +180,11 @@ class OrchestratorResult:
     events: int = 0
     trace: list[tuple[str, int, int]] = field(default_factory=list)
     timeline: list[tuple[float, int]] = field(default_factory=list)
+    # chaos telemetry (all zero on a fault-free run)
+    worker_deaths: int = 0
+    recoveries: int = 0  # trajectory re-admissions from a checkpoint
+    tool_retries: int = 0  # injected-fault retry attempts across the batch
+    injected_tool_faults: int = 0  # injected timeouts + transient errors
 
 
 class _WorkerLane:
@@ -164,6 +196,8 @@ class _WorkerLane:
         self.active: set[int] = set()  # traj_ids with a step in progress
         self.version = 0  # event-staleness guard
         self.sleeping = True  # no worker event in flight
+        self.alive = True  # dead lanes accept no work (fault injection)
+        self.incoming = 0  # checkpoint restores headed here (placement spread)
 
 
 class Orchestrator:
@@ -186,6 +220,7 @@ class Orchestrator:
         controller=None,
         routing=None,
         predictor=None,
+        faults: Optional[FaultPlan] = None,
     ):
         if controller is None and predictor is None:
             raise ValueError("need a controller or a bare predictor")
@@ -204,10 +239,18 @@ class Orchestrator:
                 lane.scheduler.preemption_margin = config.preemption_margin
                 lane.scheduler.preemption_floor = config.preemption_floor
         self._mid_step: set[int] = set()  # step in progress (resume ≠ fresh)
-        self.in_flight: dict[int, int] = {}  # migrating traj -> destination
+        self.in_flight: dict[int, tuple[int, int]] = {}  # traj -> (dst, transfer token)
         self.tool_arrived: set[int] = set()  # tool done while state in flight
+        self.faults = faults
+        # tool-boundary checkpoints are only worth their cost when a death can
+        # actually orphan a lane; fault-free runs skip them entirely (parity)
+        self._checkpointing = faults is not None and bool(faults.deaths)
+        self.restoring: dict[int, tuple[int, bool]] = {}  # traj -> (token, resubmit)
+        self._xfer_seq = itertools.count()  # staleness tokens for transfers/restores
         self.preemptions = 0
         self.migrations = 0
+        self.worker_deaths = 0
+        self.recoveries = 0
         self.events = 0
         self.trace: list[tuple[str, int, int]] = []
         self.timeline: list[tuple[float, int]] = []
@@ -224,7 +267,11 @@ class Orchestrator:
 
     def _loads(self) -> np.ndarray:
         return np.asarray(
-            [len(ln.active) + len(ln.scheduler) for ln in self.lanes], float
+            [
+                len(ln.active) + len(ln.scheduler) if ln.alive else np.inf
+                for ln in self.lanes
+            ],
+            float,
         )
 
     def _plan(self, lane: _WorkerLane, now: float) -> None:
@@ -315,6 +362,8 @@ class Orchestrator:
             tool_output_tokens=out.tool_output_tokens,
             queue_delay=getattr(traj, "_step_queue_delay", 0.0),
             gen_time=out.gen_time,
+            tool_attempts=out.tool_attempts,
+            tool_injected_faults=out.tool_injected_faults,
         )
         traj.record_step(rec)
         traj._step_queue_delay = 0.0
@@ -333,6 +382,10 @@ class Orchestrator:
             self._note("finish", traj.traj_id, lane.wid)
             return
         traj.phase = TrajectoryPhase.TOOL_CALL
+        if self._checkpointing:
+            # tool boundary = the recovery point: a later worker death loses at
+            # most the tokens decoded since this snapshot
+            self.backend.checkpoint(traj)
         self._push(now + out.tool_latency, "tool_done", traj.traj_id)
         # progressive refresh + migration decision, masked by the tool interval
         if self.controller is not None:
@@ -350,6 +403,9 @@ class Orchestrator:
         if (
             traj is None
             or traj.phase is not TrajectoryPhase.TOOL_CALL
+            or req.traj_id in self.restoring
+            or req.src != traj.worker_id  # moved by a checkpoint recovery
+            or not self.lanes[req.dst].alive  # destination died since emission
             or not self.backend.can_migrate(traj)
         ):
             # resumed, finished, or already moved: migrating now would stall the
@@ -362,12 +418,15 @@ class Orchestrator:
         traj.phase = TrajectoryPhase.MIGRATING
         traj.migrations += 1
         self.migrations += 1
-        self.in_flight[req.traj_id] = req.dst
-        self._push(now + dur, "migration_done", req.traj_id)
+        token = next(self._xfer_seq)
+        self.in_flight[req.traj_id] = (req.dst, token)
+        self._push(now + dur, "migration_done", (req.traj_id, token))
         self._note("migrate", req.traj_id, req.dst)
 
-    def _on_migration_done(self, tid: int, now: float) -> None:
-        dst = self.in_flight.pop(tid)
+    def _on_migration_done(self, tid: int, token: int, now: float) -> None:
+        if self.in_flight.get(tid, (None, None))[1] != token:
+            return  # transfer aborted (destination died mid-flight)
+        dst, _ = self.in_flight.pop(tid)
         traj = self.by_id[tid]
         self.backend.migrate_in(traj, dst)
         traj.worker_id = dst
@@ -384,10 +443,125 @@ class Orchestrator:
     def _on_tool_done(self, tid: int, now: float) -> None:
         traj = self.by_id[tid]
         self._note("tool_done", tid, traj.worker_id)
-        if tid in self.in_flight:  # state still on the wire: wait for it
+        if tid in self.in_flight or tid in self.restoring:
+            # state still on the wire (migration or checkpoint restore): the
+            # trajectory resumes when its lane lands
             self.tool_arrived.add(tid)
             return
         self._resume(traj, now)
+
+    # ------------------------------------------------------------ faults / recovery
+    def _pick_survivor(self) -> int:
+        """Least-loaded alive lane, counting restores already headed there."""
+        alive = [ln for ln in self.lanes if ln.alive]
+        if not alive:
+            raise RuntimeError("all workers dead: nothing left to recover onto")
+        return min(
+            alive, key=lambda ln: (len(ln.active) + len(ln.scheduler) + ln.incoming, ln.wid)
+        ).wid
+
+    def _recover(self, traj: Trajectory, now: float, resubmit: bool) -> None:
+        """Re-admit ``traj`` on a survivor from its last tool-boundary checkpoint.
+
+        ``resubmit`` distinguishes a trajectory that must re-queue a generation
+        step once landed (it was generating/queued when its worker died — the
+        tokens since the last tool boundary are lost and re-decoded) from one
+        whose tool call is still outstanding (it resumes via ``tool_done``).
+        """
+        tid = traj.traj_id
+        dst = self._pick_survivor()
+        if self.controller is not None:  # reads worker_id as src: before reassign
+            self.controller.on_recover(traj, dst)
+        delay = self.backend.restore(traj, dst)
+        traj.worker_id = dst
+        traj.recoveries += 1
+        self.recoveries += 1
+        self.lanes[dst].incoming += 1
+        token = next(self._xfer_seq)
+        self.restoring[tid] = (token, resubmit)
+        self._push(now + delay, "restore_done", (tid, token))
+        self._note("recover", tid, dst)
+
+    def _on_restore_done(self, tid: int, token: int, now: float) -> None:
+        entry = self.restoring.get(tid)
+        if entry is None or entry[0] != token:
+            return  # superseded: the restore target died before the lane landed
+        _, resubmit = self.restoring.pop(tid)
+        traj = self.by_id[tid]
+        self.lanes[traj.worker_id].incoming -= 1
+        self._note("restore_done", tid, traj.worker_id)
+        if resubmit:
+            traj.phase = TrajectoryPhase.PENDING
+            self._submit(traj, now)
+        elif tid in self.tool_arrived:  # tool finished while the lane was in flight
+            self.tool_arrived.discard(tid)
+            self._resume(traj, now)
+        else:
+            traj.phase = TrajectoryPhase.TOOL_CALL
+
+    def _on_worker_death(self, wid: int, now: float) -> None:
+        lane = self.lanes[wid]
+        if not lane.alive:
+            return
+        lane.alive = False
+        lane.version += 1  # every in-flight worker event for this lane is stale
+        lane.sleeping = True
+        self.worker_deaths += 1
+        self._note("worker_death", -1, wid)
+        # queued residents: their scheduler entries die with the lane
+        queued: list[Trajectory] = []
+        while len(lane.scheduler):
+            t = lane.scheduler.pop(now)
+            if t is not None:
+                queued.append(t)
+        victims = [self.by_id[tid] for tid in sorted(lane.active)]
+        lane.active.clear()
+        self.backend.kill(wid)
+        if self.controller is not None:
+            self.controller.mark_worker_dead(wid)
+        for traj in victims + queued:
+            self._mid_step.discard(traj.traj_id)  # partial step is gone: fresh redo
+            self._recover(traj, now, resubmit=True)
+        for traj in self.trajs:
+            if traj.finished:
+                continue
+            tid = traj.traj_id
+            if tid in self.in_flight and self.in_flight[tid][0] == wid:
+                # in-flight migration to a corpse: abort cleanly, recover from
+                # the checkpoint (the wire copy never lands)
+                self.in_flight.pop(tid)
+                self.controller.transmission.complete(tid)
+                self._recover(traj, now, resubmit=False)
+            elif (
+                tid in self.restoring
+                and traj.worker_id == wid
+                and traj not in victims
+                and traj not in queued
+            ):
+                # restore was headed to the dead worker: re-route (new token
+                # invalidates the stale restore_done)
+                _, resubmit = self.restoring.pop(tid)
+                self._recover(traj, now, resubmit=resubmit)
+            elif (
+                traj.phase is TrajectoryPhase.TOOL_CALL
+                and traj.worker_id == wid
+                and tid not in self.in_flight
+                and tid not in self.restoring
+            ):
+                # resident parked at a tool boundary: its KV died with the worker
+                self._recover(traj, now, resubmit=False)
+
+    def _on_worker_up(self, wid: int, now: float) -> None:
+        lane = self.lanes[wid]
+        if lane.alive:
+            return
+        lane.alive = True
+        lane.version += 1
+        lane.sleeping = True
+        self.backend.revive(wid)
+        if self.controller is not None:
+            self.controller.mark_worker_alive(wid)
+        self._note("worker_up", -1, wid)
 
     def _resume(self, traj: Trajectory, now: float) -> None:
         # resuming invalidates any emitted-but-unlaunched migration: its target
@@ -415,6 +589,12 @@ class Orchestrator:
         self.backend.admit(self.trajs)
         for t in self.trajs:
             self._submit(t, 0.0)
+        if self.faults is not None:
+            # the chaos schedule rides the same versioned heap as everything else
+            for t, wid in self.faults.deaths:
+                self._push(t, "worker_death", wid)
+            for t, wid in self.faults.revivals:
+                self._push(t, "worker_up", wid)
 
         now = 0.0
         while self._evq:
@@ -431,7 +611,15 @@ class Orchestrator:
             elif kind == "tool_done":
                 self._on_tool_done(payload, now)
             elif kind == "migration_done":
-                self._on_migration_done(payload, now)
+                tid, token = payload
+                self._on_migration_done(tid, token, now)
+            elif kind == "restore_done":
+                tid, token = payload
+                self._on_restore_done(tid, token, now)
+            elif kind == "worker_death":
+                self._on_worker_death(payload, now)
+            elif kind == "worker_up":
+                self._on_worker_up(payload, now)
             if self.cfg.timeline_every and self.events % self.cfg.timeline_every == 0:
                 self.timeline.append((now, sum(1 for t in self.trajs if not t.finished)))
 
@@ -448,4 +636,8 @@ class Orchestrator:
             events=self.events,
             trace=self.trace,
             timeline=self.timeline,
+            worker_deaths=self.worker_deaths,
+            recoveries=self.recoveries,
+            tool_retries=sum(t.tool_retries for t in self.trajs),
+            injected_tool_faults=sum(t.injected_tool_faults for t in self.trajs),
         )

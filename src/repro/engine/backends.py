@@ -32,6 +32,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.faults import FaultPlan, RetryPolicy, resolve_tool_call
 from repro.core.migration import kv_cache_bytes, migration_time
 from repro.core.orchestrator import StepOutcome
 from repro.core.trajectory import Trajectory
@@ -142,8 +143,12 @@ class SimBackend:
         latency_scale: float = 1.0,
         quantum: Optional[int] = None,
         prompt_lens: Optional[dict[int, int]] = None,
+        faults: Optional[FaultPlan] = None,
+        retry: RetryPolicy = RetryPolicy(),
     ):
         self.quantum = quantum
+        self.faults = faults
+        self.retry = retry
         self.interruptible = quantum is None
         self.interference = interference
         self.prefill_speedup = prefill_speedup
@@ -272,13 +277,23 @@ class SimBackend:
     def tool_submit(self, traj: Trajectory) -> StepOutcome:
         plan = traj.payload
         s = traj.num_steps
+        lat = float(plan.tool_latency[s]) * self.latency_scale
+        terminal = s + 1 >= plan.num_steps
+        attempts, injected = 1, 0
+        if not terminal:
+            # identical injection arithmetic to ToolEnvironment.invoke (terminal
+            # steps run no tool on either backend, so nothing to inject there)
+            trace = resolve_tool_call(self.faults, self.retry, traj.traj_id, s, lat)
+            lat, attempts, injected = trace.latency, trace.attempts, trace.injected_faults
         return StepOutcome(
             gen_tokens=int(plan.gen_tokens[s]),
-            terminal=s + 1 >= plan.num_steps,
-            tool_latency=float(plan.tool_latency[s]) * self.latency_scale,
+            terminal=terminal,
+            tool_latency=lat,
             tool_failed=bool(plan.tool_failed[s]),
             tool_output_tokens=int(plan.tool_output_tokens[s]),
             gen_time=self._gen_time.pop(traj.traj_id, 0.0),
+            tool_attempts=attempts,
+            tool_injected_faults=injected,
         )
 
     def tool_absorb(self, traj: Trajectory) -> None:
@@ -301,6 +316,37 @@ class SimBackend:
 
     def stats(self, wid: int) -> dict:
         return {}  # nothing measured: the cost model *is* the assumption
+
+    # ------------------------------------------------------------ failure realism
+    def checkpoint(self, traj: Trajectory) -> None:
+        pass  # analytic state: the Trajectory record IS the tool-boundary snapshot
+
+    def restore(self, traj: Trajectory, dst: int) -> float:
+        """Re-admit from the last tool boundary: price the KV re-materialization
+        as a transfer of the boundary context (the analytic twin of re-implanting
+        the engine's host-gathered checkpoint lane)."""
+        tid = traj.traj_id
+        self.suspended.pop(tid, None)  # partial progress died with the worker
+        self._gen_time.pop(tid, None)
+        self.cache_home[tid] = {dst}
+        kv = kv_cache_bytes(
+            max(traj.context_tokens, traj.prompt_tokens),
+            self.kv_layers, self.kv_heads, self.kv_head_dim,
+        )
+        return migration_time(kv, self.link_bandwidth)
+
+    def kill(self, wid: int) -> None:
+        w = self.workers[wid]
+        w.active.clear()
+        w.trajs.clear()
+        w.plan = None
+        for homes in self.cache_home.values():  # its KV (and prefixes) are gone
+            homes.discard(wid)
+        for homes in self.prompt_home.values():
+            homes.discard(wid)
+
+    def revive(self, wid: int) -> None:
+        pass  # kill() already cleared the state; replacement capacity joins cold
 
 
 # ---------------------------------------------------------------- engine backend
@@ -348,6 +394,7 @@ class EngineBackend:
         link_bandwidth: float = 2e9,
         stop_token: Optional[int] = None,
         step_budget: Optional[Callable[[Trajectory], int]] = None,
+        checkpoint_dir: Optional[str] = None,
     ):
         for i, w in enumerate(engines):
             if w.worker_id != i:
@@ -374,6 +421,14 @@ class EngineBackend:
         self._gen_time: dict[int, float] = {}
         self.total_tokens = 0  # real tokens decoded across all workers
         self.wall = 0.0  # real seconds spent in the data plane
+        # failure realism: tool-boundary checkpoints (host-gathered lane
+        # packages in migrate_out format) + dead-worker bookkeeping
+        self.checkpoint_dir = checkpoint_dir
+        self.ckpts: dict[int, dict] = {}
+        self.dead: set[int] = set()
+        # tool output absorbed since the last checkpoint: a boundary snapshot
+        # pre-dates the absorb, so a restore must replay it into the lane
+        self.last_absorb: dict[int, list[int]] = {}
 
     @property
     def n_workers(self) -> int:
@@ -466,15 +521,19 @@ class EngineBackend:
             tool_failed=bool(out.failed),
             tool_output_tokens=len(out.output_tokens),
             gen_time=self._gen_time.pop(tid, 0.0),
+            tool_attempts=int(getattr(out, "attempts", 1)),
+            tool_injected_faults=int(getattr(out, "injected_faults", 0)),
         )
 
     def tool_absorb(self, traj: Trajectory) -> None:
         toks = self.pending_tool.pop(traj.traj_id, None)
+        self.last_absorb.pop(traj.traj_id, None)
         if toks:  # chunked prefill into the lane, wherever it lives now
             view = self.views[traj.worker_id]
             t0 = time.perf_counter()
             view.engine.extend(traj.traj_id, toks)
             self.wall += time.perf_counter() - t0
+            self.last_absorb[traj.traj_id] = list(toks)
 
     def can_migrate(self, traj: Trajectory) -> bool:
         return traj.traj_id in self.views[traj.worker_id].engine.store
@@ -499,6 +558,88 @@ class EngineBackend:
     def release(self, traj: Trajectory) -> None:
         """Finished: the lane retires into the radix cache (prefix stays warm)."""
         self.views[traj.worker_id].engine.release(traj.traj_id)
+        self.ckpts.pop(traj.traj_id, None)
+        self.last_absorb.pop(traj.traj_id, None)
 
     def stats(self, wid: int) -> dict:
         return self.views[wid].engine.dispatch_stats()
+
+    # ------------------------------------------------------------ failure realism
+    def checkpoint(self, traj: Trajectory) -> None:
+        """Tool-boundary snapshot: host-gather the lane without evicting it.
+
+        The package is ``migrate_out``'s exact wire format, so recovery is just
+        a ``migrate_in`` on a survivor.  With ``checkpoint_dir`` set the cache
+        tree is also persisted through ``repro.checkpoint`` (crash-atomic npz +
+        manifest) for durability beyond this process."""
+        tid = traj.traj_id
+        view = self.views[traj.worker_id]
+        if tid not in view.engine.store:
+            return  # lane already on the wire; the transfer carries the state
+        t0 = time.perf_counter()
+        pkg = view.engine.checkpoint_out(tid)
+        self.wall += time.perf_counter() - t0
+        self.ckpts[tid] = pkg
+        self.last_absorb.pop(tid, None)  # the new snapshot includes it
+        if self.checkpoint_dir:
+            from repro.checkpoint import checkpoint as ckpt
+
+            ckpt.save(
+                f"{self.checkpoint_dir}/traj_{tid:05d}",
+                {"cache": pkg["cache"], "key": np.asarray(pkg["key"])},
+                step=traj.num_steps,
+                extra={
+                    "seq_id": int(pkg["seq_id"]),
+                    "tokens": [int(x) for x in pkg["tokens"]],
+                    "generated": int(pkg["generated"]),
+                },
+            )
+
+    def restore(self, traj: Trajectory, dst: int) -> float:
+        """Re-admit on ``dst`` from the last tool-boundary checkpoint.
+
+        Everything decoded since that boundary died with the worker and is
+        re-decoded (the step restarts fresh); a trajectory that never reached a
+        boundary re-admits from its prompt.  Returns the virtual transfer (or
+        re-prefill) seconds the recovery costs."""
+        import jax  # local: backends must import without initializing jax early
+
+        tid = traj.traj_id
+        self.step_remaining.pop(tid, None)  # partial step state is gone
+        self._step_gen.pop(tid, None)
+        self._gen_time.pop(tid, None)
+        self.in_transit.pop(tid, None)  # a wire copy to a corpse never lands
+        view = self.views[dst]
+        pkg = self.ckpts.get(tid)
+        if pkg is None:
+            toks = self.prompts[tid]
+            t0 = time.perf_counter()
+            view.engine.prefill(tid, toks)
+            self.wall += time.perf_counter() - t0
+            return admission_seconds(len(toks), view.token_time, self.prefill_speedup)
+        t0 = time.perf_counter()
+        view.engine.migrate_in(dict(pkg))
+        extra = self.last_absorb.get(tid)
+        if extra:  # tool output absorbed after the snapshot: replay it
+            view.engine.extend(tid, extra)
+        self.wall += time.perf_counter() - t0
+        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(pkg["cache"]))
+        return migration_time(nbytes, self.link_bandwidth)
+
+    def kill(self, wid: int) -> None:
+        """Worker death: every resident lane (live + retired prefix cache) is
+        lost; pending tool outputs are host-side and survive."""
+        view = self.views[wid]
+        self.dead.add(wid)
+        for tid in list(view.engine.store):
+            self.step_remaining.pop(tid, None)
+            self._step_gen.pop(tid, None)
+            self._gen_time.pop(tid, None)
+        self._active[wid].clear()
+        view.plan = None
+        view.engine.reset_cache()
+
+    def revive(self, wid: int) -> None:
+        """Replacement capacity joins in slot ``wid``: cold cache, same engine
+        shell (kill() already dropped every lane and radix ref)."""
+        self.dead.discard(wid)

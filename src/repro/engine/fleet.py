@@ -161,7 +161,7 @@ class RolloutFleet:
                 reused.append(i)
             else:
                 workers.append(self._build_worker(i, degree, mesh))
-        migrated = 0
+        moves: dict[int, int] = {}  # seq_id -> destination worker index
         for i, old in enumerate(old_workers):
             if i in reused:
                 continue
@@ -169,10 +169,10 @@ class RolloutFleet:
                 pkg = old.migrate_out(seq_id)
                 if i < len(workers):
                     dst = workers[i]
-                else:
+                else:  # fleet shrank past this slot: redistribute (elastic case)
                     dst = min(workers, key=lambda w: len(w.store))
                 dst.migrate_in(pkg)
-                migrated += 1
+                moves[seq_id] = dst.worker_id
         self.spec = new_spec
         self.workers = workers
         self.reconfigurations += 1
@@ -182,5 +182,6 @@ class RolloutFleet:
             "to": list(new_spec.degrees),
             "reused": reused,
             "rebuilt": rebuilt,
-            "migrated_residents": migrated,
+            "migrated_residents": len(moves),
+            "moves": moves,
         }

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.controller import HeddleController
+from repro.core.faults import FaultPlan, RetryPolicy, resolve_tool_call
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig, OrchestratorResult
 from repro.core.trajectory import Trajectory
 from repro.engine.backends import EngineBackend, SimBackend
@@ -65,6 +66,7 @@ class RuntimeConfig:
     preemption_floor: float = 2.0
     trace: bool = False                  # record the decision trace (parity harness)
     seed: int = 0
+    checkpoint_dir: str | None = None    # persist tool-boundary checkpoints here
 
 
 @dataclass
@@ -82,14 +84,21 @@ class RuntimeResult:
     events: int = 0
     degrees: list[int] = field(default_factory=list)  # fleet MP degrees (§6)
     trace: list[tuple[str, int, int]] = field(default_factory=list)
+    # chaos telemetry (all zero on a fault-free run)
+    worker_deaths: int = 0
+    recoveries: int = 0
+    tool_retries: int = 0
+    injected_tool_faults: int = 0
 
 
 @dataclass
 class ToolResult:
     latency: float
-    failed: bool
+    failed: bool                         # plan-driven task outcome (rectification)
     output_tokens: list[int]
     terminal: bool = False
+    attempts: int = 1                    # chaos layer: >1 = retries absorbed faults
+    injected_faults: int = 0             # chaos layer: injected timeouts + errors
 
 
 class ToolEnvironment:
@@ -107,11 +116,15 @@ class ToolEnvironment:
 
     def __init__(self, seed: int = 0, latency_scale: float = 1.0,
                  vocab: tuple[int, int] = (5, 105),
-                 profile: ToolProfile | None = None):
+                 profile: ToolProfile | None = None, *,
+                 faults: FaultPlan | None = None,
+                 retry: RetryPolicy = RetryPolicy()):
         self.seed = seed
         self.latency_scale = latency_scale
         self.vocab = vocab
         self.profile = profile
+        self.faults = faults
+        self.retry = retry
         self.invocations = 0
         self.total_latency = 0.0
 
@@ -130,9 +143,14 @@ class ToolEnvironment:
         n_out = int(plan.tool_output_tokens[step])
         toks = [int(t) for t in self._rng(traj.traj_id, step).integers(
             *self.vocab, n_out)]
+        # injected system faults stretch latency via the retry discipline but
+        # never touch the plan-driven outcome (failed / output tokens)
+        trace = resolve_tool_call(self.faults, self.retry, traj.traj_id, step, lat)
         self.invocations += 1
-        self.total_latency += lat
-        return ToolResult(lat, bool(plan.tool_failed[step]), toks)
+        self.total_latency += trace.latency
+        return ToolResult(trace.latency, bool(plan.tool_failed[step]), toks,
+                          attempts=trace.attempts,
+                          injected_faults=trace.injected_faults)
 
     def step_outcome(self, traj: Trajectory, step: int, gen_tokens: list[int],
                      context: list[int]) -> ToolResult:
@@ -273,7 +291,8 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                  fleet: FleetSpec | None = None, capacity: int | None = None,
                  migration_load_gap: int = 1, migration_cooldown_steps: int = 1,
                  rank_hysteresis: float = 0.2, temperature: float = 0.8,
-                 devices=None) -> "RolloutRuntime":
+                 devices=None, faults: FaultPlan | None = None,
+                 retry: RetryPolicy = RetryPolicy()) -> "RolloutRuntime":
     """Wire controller + real worker fleet + tool environment into a RolloutRuntime.
 
     ``fleet`` is the per-worker MP degree spec (§6); omitted, it defaults to a
@@ -297,15 +316,19 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                              sampler=SamplerConfig(temperature=temperature),
                              seed=config.seed, devices=devices)
     env = ToolEnvironment(seed=config.seed,
-                          latency_scale=config.tool_latency_scale)
-    return RolloutRuntime(fleet_obj, controller, batch, env, config)
+                          latency_scale=config.tool_latency_scale,
+                          faults=faults, retry=retry)
+    return RolloutRuntime(fleet_obj, controller, batch, env, config,
+                          faults=faults)
 
 
 def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
                config: RuntimeConfig = RuntimeConfig(), *,
                fleet: FleetSpec | None = None, migration_load_gap: int = 1,
                migration_cooldown_steps: int = 1, rank_hysteresis: float = 0.2,
-               prompt_lens: dict[int, int] | None = None) -> OrchestratorResult:
+               prompt_lens: dict[int, int] | None = None,
+               faults: FaultPlan | None = None,
+               retry: RetryPolicy = RetryPolicy()) -> OrchestratorResult:
     """Run a runtime configuration on the analytic twin — no model, no engine.
 
     Builds the exact controller ``make_runtime`` would and a ``SimBackend`` in
@@ -331,7 +354,8 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
         prefill_speedup=config.prefill_speedup,
         link_bandwidth=config.link_bandwidth,
         latency_scale=config.tool_latency_scale,
-        quantum=config.quantum, prompt_lens=prompt_lens)
+        quantum=config.quantum, prompt_lens=prompt_lens,
+        faults=faults, retry=retry)
     orch = Orchestrator(
         backend, batch,
         OrchestratorConfig(scheduler=config.scheduler, migration=config.migration,
@@ -339,7 +363,7 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
                            preemption_margin=config.preemption_margin,
                            preemption_floor=config.preemption_floor,
                            trace=config.trace),
-        controller=controller)
+        controller=controller, faults=faults)
     return orch.run()
 
 
@@ -370,10 +394,12 @@ class RolloutRuntime:
                  config: RuntimeConfig = RuntimeConfig(),
                  prompts: dict[int, list[int]] | None = None, *,
                  stop_token: int | None = None,
-                 step_budget=None):
+                 step_budget=None,
+                 faults: FaultPlan | None = None):
         self.cfg = config
         self.controller = controller
         self.env = tool_env
+        self.faults = faults
         self.trajs = list(trajectories)
         self.prompts = prompts if prompts is not None \
             else synth_prompts(self.trajs, seed=config.seed)
@@ -418,7 +444,8 @@ class RolloutRuntime:
             token_times=[self._token_time(w.mp) for w in engines],
             prefill_speedup=self.cfg.prefill_speedup,
             link_bandwidth=self.cfg.link_bandwidth,
-            stop_token=self.stop_token, step_budget=self.step_budget)
+            stop_token=self.stop_token, step_budget=self.step_budget,
+            checkpoint_dir=self.cfg.checkpoint_dir)
 
     def _token_time(self, mp: int) -> float:
         """Virtual s/token at batch 1 for MP degree ``mp``.
@@ -453,7 +480,7 @@ class RolloutRuntime:
                                preemption_margin=cfg.preemption_margin,
                                preemption_floor=cfg.preemption_floor,
                                max_events=2_000_000, trace=cfg.trace),
-            controller=self.controller)
+            controller=self.controller, faults=self.faults)
         res = self._orch.run()
         for view in self.backend.views:              # final telemetry snapshot
             self.controller.record_worker_stats(view.wid,
@@ -474,6 +501,10 @@ class RolloutRuntime:
             events=res.events,
             degrees=list(self.spec.degrees),
             trace=res.trace,
+            worker_deaths=res.worker_deaths,
+            recoveries=res.recoveries,
+            tool_retries=res.tool_retries,
+            injected_tool_faults=res.injected_tool_faults,
         )
 
     # ------------------------------------------------------------ §6 feedback loop
@@ -488,15 +519,23 @@ class RolloutRuntime:
         return self.controller.calibrate_latency()
 
     def reconfigure(self, spec: FleetSpec | None = None, *,
-                    calibrate: bool = True) -> dict:
+                    calibrate: bool = True, budget: int | None = None) -> dict:
         """Between-steps reconfiguration: calibrate → provision → split/merge.
 
         With ``spec=None`` the controller re-runs Algorithm 2 over this batch's
         trajectories (now carrying observed step histories) under the calibrated
         latency model and the fleet executes the resulting split/merge moves
         (``RolloutFleet.reconfigure``: reuse unchanged slots, re-shard changed
-        ones, migrate residents across MP degrees).  Only legal between runs —
-        the event queue must be drained.  Returns the fleet's move report.
+        ones, migrate residents across MP degrees).  ``budget`` overrides the
+        accelerator budget for this provisioning round — the dynamic case of
+        Algorithm 2: a dead worker shrinks the budget, recovered or scaled-up
+        capacity grows it, and the fleet re-partitions onto whatever survives
+        (specs of a different length than the current fleet are handled —
+        retired workers' residents redistribute, new slots join cold).  Only
+        legal between runs — the event queue must be drained.  Returns the
+        fleet's move report; residents the fleet relocated have their
+        trajectory ``worker_id`` re-pointed so the next run resumes them where
+        they actually live.
         """
         if self.fleet is None:
             raise ValueError("runtime was built from a bare worker list; "
@@ -508,13 +547,23 @@ class RolloutRuntime:
             self.controller.calibrate_latency()
         if spec is None:
             was_adaptive = self.controller.config.adaptive_resources
+            was_budget = self.controller.gpu_budget
             self.controller.config.adaptive_resources = True
+            if budget is not None:
+                self.controller.gpu_budget = int(budget)
             try:
                 spec = FleetSpec.from_degrees(
                     self.controller.provision(self.trajs))
             finally:
                 self.controller.config.adaptive_resources = was_adaptive
+                self.controller.gpu_budget = was_budget
         report = self.fleet.reconfigure(spec)
+        moves = report.get("moves", {})
+        for t in self.trajs:
+            if t.traj_id in moves:
+                t.worker_id = moves[t.traj_id]
+            elif t.worker_id is not None and t.worker_id >= spec.n_workers:
+                t.worker_id = None       # stale placement beyond the new fleet
         self.spec = self.fleet.spec
         self.controller.degrees = list(self.spec.degrees)
         self.backend = self._make_backend(self.fleet.workers)

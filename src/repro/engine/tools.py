@@ -9,8 +9,11 @@ Table 1 means (coding 0.46s, search 1.42s, math 0.051s) plus a failure probabili
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
+
+from repro.core.faults import FaultPlan, RetryPolicy, resolve_tool_call
 
 
 @dataclass(frozen=True)
@@ -48,20 +51,39 @@ class ToolExecutor:
     Outcomes are seeded per ``(traj_id, step)``, NOT per call sequence: two
     backends (or two scheduling orders) invoking the same trajectory's steps
     must observe identical latencies/failures, and a shared sequential rng
-    would entangle every trajectory's outcome with global dispatch order."""
+    would entangle every trajectory's outcome with global dispatch order.
 
-    def __init__(self, profile: ToolProfile, seed: int = 0):
+    Two failure channels, never conflated (see ``core.faults``): ``failed`` is
+    the *task-level* outcome rolled from ``ToolProfile.fail_rate`` (the
+    rectification signal the predictor features on), while a ``FaultPlan``
+    injects *system-level* timeouts/transient errors that the executor absorbs
+    via ``RetryPolicy`` — they stretch latency (and the retry telemetry) but
+    cannot change the task outcome."""
+
+    def __init__(self, profile: ToolProfile, seed: int = 0, *,
+                 faults: Optional[FaultPlan] = None,
+                 retry: RetryPolicy = RetryPolicy()):
         self.profile = profile
         self.seed = seed
+        self.faults = faults
+        self.retry = retry
         self.invocations = 0
         self.total_latency = 0.0
+        self.retries = 0
+        self.injected_faults = 0
 
     def invoke(self, traj_id: int, step: int) -> tuple[float, bool, int]:
-        """Returns (latency_s, failed, output_tokens) for one (traj, step)."""
+        """Returns (latency_s, failed, output_tokens) for one (traj, step).
+
+        The task-level roll consumes the rng stream identically with or without
+        a fault plan, so chaos never perturbs plan-driven outcomes."""
         rng = np.random.default_rng((self.seed, traj_id, step))
         lat = float(self.profile.sample_latency(rng))
         failed = bool(rng.random() < self.profile.fail_rate)
         out = self.profile.sample_output_tokens(rng, failed)
+        trace = resolve_tool_call(self.faults, self.retry, traj_id, step, lat)
         self.invocations += 1
-        self.total_latency += lat
-        return lat, failed, out
+        self.total_latency += trace.latency
+        self.retries += trace.retries
+        self.injected_faults += trace.injected_faults
+        return trace.latency, failed, out

@@ -627,6 +627,26 @@ class RolloutWorker:
             "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
         }
 
+    def checkpoint_out(self, seq_id: int) -> dict:
+        """Host-gather one lane WITHOUT evicting it (tool-boundary checkpoint).
+
+        Same package format as :meth:`migrate_out`, but the live lane keeps
+        running here — the copy is a recovery source for the fault layer
+        (``migrate_in`` on a survivor re-implants it after a worker death).
+        Lifecycle flags are snapshotted clean: a restore always re-admits the
+        trajectory parked at its tool boundary, never mid-preemption."""
+        seq = self.store[seq_id]
+        lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
+        return {
+            "seq_id": seq.seq_id,
+            "tokens": list(seq.tokens),
+            "generated": seq.generated,
+            "key": np.asarray(seq.key),
+            "preempted": False,
+            "finished": False,
+            "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
+        }
+
     def migrate_in(self, package: dict) -> None:
         """Implant a migrated lane into a free slot (capacities must match).
 

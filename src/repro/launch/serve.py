@@ -39,14 +39,26 @@ def build_runtime(args, cfg, params):
                          migration=args.migration == "on",
                          max_active=args.max_active, quantum=args.quantum,
                          tool_latency_scale=args.tool_latency,
-                         trace=args.trace > 0, seed=args.seed)
+                         trace=args.trace > 0, seed=args.seed,
+                         checkpoint_dir=args.checkpoint_dir or None)
     fleet = None
     if args.degrees:
         fleet = FleetSpec.from_degrees(
             [int(d) for d in args.degrees.split(",")])
+    faults = None
+    if args.chaos_seed is not None:
+        from repro.core.faults import FaultPlan
+        n_workers = fleet.n_workers if fleet is not None else args.workers
+        # horizon estimate for scheduling the death: serial decode work split
+        # across the fleet (an upper-ish bound is fine — kill_frac lands the
+        # death mid-run for any reasonable workload)
+        horizon = (sum(t.payload.total_tokens for t in batch)
+                   * rcfg.token_time / max(1, n_workers))
+        faults = FaultPlan.chaos(seed=args.chaos_seed, n_workers=n_workers,
+                                 horizon=horizon)
     return make_runtime(cfg, params, batch, predictor,
                         n_workers=args.workers, config=rcfg,
-                        capacity=args.capacity, fleet=fleet)
+                        capacity=args.capacity, fleet=fleet, faults=faults)
 
 
 def main(argv=None):
@@ -86,6 +98,14 @@ def main(argv=None):
                          "(event, traj, worker) decision trace — the sequence "
                          "the sim/engine parity harness compares")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run under a seeded FaultPlan.chaos schedule: one "
+                         "mid-run worker death + revival and injected tool "
+                         "timeouts/errors absorbed by capped-backoff retries "
+                         "(trajectories recover from tool-boundary checkpoints)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="also persist tool-boundary checkpoints to this "
+                         "directory (crash-atomic npz, one per trajectory)")
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k",
                     choices=["prefill_32k", "decode_32k", "long_500k"])
@@ -134,6 +154,11 @@ def main(argv=None):
     print(f"preemptions {res.preemptions}, tool-interval migrations "
           f"{res.migrations}, tool invocations {runtime.env.invocations}, "
           f"measured prefix reuse rate {0.0 if rate is None else rate:.2f}")
+    if args.chaos_seed is not None:
+        print(f"chaos (seed {args.chaos_seed}): worker deaths "
+              f"{res.worker_deaths}, checkpoint recoveries {res.recoveries}, "
+              f"tool retries {res.tool_retries}, injected tool faults "
+              f"{res.injected_tool_faults}")
     if args.trace > 0:
         print(f"\ndecision trace (first {args.trace} of {len(res.trace)}):")
         for kind, tid, wid in res.trace[:args.trace]:

@@ -1,0 +1,81 @@
+"""Crash-atomic checkpoint save and strict dtype validation on restore."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+
+
+def _tree(val: float, dtype=jnp.float32):
+    return {"w": jnp.full((3, 2), val, dtype=dtype), "b": jnp.zeros((2,), dtype)}
+
+
+def test_save_is_atomic_overwrite(tmp_path):
+    """Re-saving over an existing checkpoint swaps the whole directory in one
+    commit: content updates, and no .tmp/.old staging dirs survive."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _tree(1.0), step=1)
+    checkpoint.save(path, _tree(2.0), step=2)
+    restored = checkpoint.restore(path, _tree(0.0))
+    assert float(restored["w"][0, 0]) == 2.0
+    assert checkpoint.load_step(path) == 2
+    leftovers = [d for d in os.listdir(tmp_path) if d != "ckpt"]
+    assert leftovers == []
+
+
+def test_save_recovers_from_stale_tmp(tmp_path):
+    """A .tmp dir abandoned by a crashed earlier save (possibly half-written)
+    must not poison the next save."""
+    path = str(tmp_path / "ckpt")
+    stale = path + ".tmp"
+    os.makedirs(stale)
+    with open(os.path.join(stale, "leaves.npz"), "w") as f:
+        f.write("garbage from a crashed save")
+    checkpoint.save(path, _tree(3.0), step=3)
+    restored = checkpoint.restore(path, _tree(0.0))
+    assert float(restored["w"][0, 0]) == 3.0
+    assert not os.path.exists(stale)
+
+
+def test_interrupted_save_leaves_previous_checkpoint_loadable(tmp_path, monkeypatch):
+    """Simulated crash mid-stage (before the commit rename): the target still
+    holds the previous complete checkpoint."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _tree(1.0), step=1)
+
+    def crash(*a, **kw):
+        raise RuntimeError("simulated crash mid-save")
+
+    monkeypatch.setattr(checkpoint.np, "savez", crash)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        checkpoint.save(path, _tree(2.0), step=2)
+    monkeypatch.undo()
+    restored = checkpoint.restore(path, _tree(0.0))
+    assert float(restored["w"][0, 0]) == 1.0
+    assert checkpoint.load_step(path) == 1
+
+
+def test_restore_dtype_mismatch_raises(tmp_path):
+    """Regression: restore must refuse to silently cast — loading f32 bytes
+    into a bf16 (or int) template is state corruption, not a convenience."""
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _tree(1.5, dtype=jnp.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        checkpoint.restore(path, _tree(0.0, dtype=jnp.bfloat16))
+    with pytest.raises(ValueError, match="refusing to cast"):
+        checkpoint.restore(path, {"w": jnp.zeros((3, 2), jnp.int32),
+                                  "b": jnp.zeros((2,), jnp.int32)})
+    # matching template still round-trips exactly
+    ok = checkpoint.restore(path, _tree(0.0))
+    np.testing.assert_array_equal(np.asarray(ok["w"]),
+                                  np.full((3, 2), 1.5, np.float32))
+
+
+def test_restore_shape_mismatch_still_raises(tmp_path):
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, _tree(1.0))
+    with pytest.raises(ValueError, match="template"):
+        checkpoint.restore(path, {"w": jnp.zeros((4, 2)), "b": jnp.zeros((2,))})

@@ -1,0 +1,269 @@
+"""Failure realism: seeded fault injection, tool retry discipline, trajectory
+checkpoint/restore after worker death, and chaos parity across both backends."""
+
+import copy
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import FaultPlan, RetryPolicy, resolve_tool_call
+from repro.engine.runtime import (RuntimeConfig, ToolEnvironment, build_workbench,
+                                  make_runtime, run_on_sim)
+from repro.models import model as M
+
+SEED = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm_135m").reduced(n_periods=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _rcfg(**kw):
+    base = dict(scheduler="pps", migration=True, max_active=2, quantum=8,
+                link_bandwidth=math.inf, seed=SEED)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _chaos(horizon: float) -> FaultPlan:
+    plan = FaultPlan.chaos(seed=SEED, n_workers=2, horizon=horizon)
+    assert plan.deaths and plan.tool_timeout_rate >= 0.10
+    return plan
+
+
+# ------------------------------------------------------------ fault plan units
+
+def test_retry_policy_backoff_capped():
+    r = RetryPolicy(max_attempts=5, backoff_base=0.05, backoff_factor=2.0,
+                    backoff_cap=0.15)
+    assert r.backoff(0) == 0.05
+    assert r.backoff(1) == 0.10
+    assert r.backoff(2) == 0.15          # capped
+    assert r.backoff(9) == 0.15
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_fault_plan_rates_must_leave_room_for_success():
+    with pytest.raises(ValueError):
+        FaultPlan(tool_timeout_rate=0.6, tool_error_rate=0.5)
+
+
+def test_tool_fault_seeded_per_traj_step_attempt():
+    """Fault rolls depend only on (seed, traj, step, attempt) — never on call
+    order — so sim and engine observe identical injected outcomes."""
+    a = FaultPlan(seed=3, tool_timeout_rate=0.3, tool_error_rate=0.2)
+    b = FaultPlan(seed=3, tool_timeout_rate=0.3, tool_error_rate=0.2)
+    rolls_a = [a.tool_fault(7, s, k) for s in range(6) for k in range(3)]
+    for other in (11, 12):               # interleave unrelated traffic on b
+        b.tool_fault(other, 0, 0)
+    rolls_b = [b.tool_fault(7, s, k) for s in range(6) for k in range(3)]
+    assert rolls_a == rolls_b
+    assert len(set(rolls_a)) > 1         # rates actually produce mixed outcomes
+    # retries see a fresh (but reproducible) roll per attempt
+    assert FaultPlan(seed=3, tool_timeout_rate=0.5).tool_fault(1, 0, 0) == \
+        FaultPlan(seed=3, tool_timeout_rate=0.5).tool_fault(1, 0, 0)
+
+
+def test_resolve_tool_call_bounds_delay_never_outcome():
+    """The final allowed attempt always succeeds: chaos perturbs timing, not
+    task results — injected delay is capped by the retry policy."""
+    faults = FaultPlan(seed=0, tool_timeout_rate=0.55, tool_error_rate=0.35,
+                       tool_timeout_s=1.0)
+    retry = RetryPolicy(max_attempts=3, backoff_base=0.1, backoff_cap=0.2)
+    for tid in range(40):
+        tr = resolve_tool_call(faults, retry, tid, 0, base_latency=0.25)
+        assert 1 <= tr.attempts <= retry.max_attempts
+        assert tr.injected_faults == tr.attempts - 1
+        assert tr.latency >= 0.25        # the successful attempt always runs
+        # worst case: 2 faulted attempts (timeout 1.0 each) + backoffs + success
+        assert tr.latency <= 2 * 1.0 + 0.1 + 0.2 + 0.25 + 1e-9
+    clean = resolve_tool_call(None, retry, 0, 0, base_latency=0.25)
+    assert clean.latency == 0.25 and clean.attempts == 1
+
+
+def test_tool_executor_faults_stretch_latency_not_outcome():
+    """ToolExecutor under a FaultPlan: identical plan-driven (failed, tokens),
+    only latency and retry telemetry change."""
+    from repro.engine.tools import TOOL_PROFILES, ToolExecutor
+
+    faults = FaultPlan(seed=9, tool_timeout_rate=0.5, tool_error_rate=0.2)
+    clean = ToolExecutor(TOOL_PROFILES["coding"], seed=3)
+    chaos = ToolExecutor(TOOL_PROFILES["coding"], seed=3, faults=faults)
+    stretched = 0
+    for tid in range(20):
+        lat_c, failed_c, out_c = clean.invoke(tid, 0)
+        lat_f, failed_f, out_f = chaos.invoke(tid, 0)
+        assert (failed_f, out_f) == (failed_c, out_c)
+        assert lat_f >= lat_c - 1e-12
+        stretched += lat_f > lat_c
+    assert stretched > 0 and chaos.injected_faults > 0
+    assert chaos.retries == chaos.injected_faults
+
+
+def test_tool_environment_faults_preserve_plan_outcomes():
+    """ToolEnvironment: injected faults never touch failed/output tokens, and
+    the terminal step injects nothing (no tool runs on either backend)."""
+    batch, _ = build_workbench(n_prompts=2, group_size=2, seed=SEED)
+    traj = max(batch, key=lambda t: t.payload.num_steps)
+    faults = FaultPlan(seed=SEED, tool_timeout_rate=0.6, tool_error_rate=0.3)
+    clean = ToolEnvironment(seed=SEED)
+    chaos = ToolEnvironment(seed=SEED, faults=faults)
+    for s in range(traj.payload.num_steps - 1):
+        a, b = clean.invoke(traj, s), chaos.invoke(traj, s)
+        assert (a.failed, a.output_tokens) == (b.failed, b.output_tokens)
+        assert b.latency >= a.latency
+        assert b.injected_faults == b.attempts - 1
+    last = traj.payload.num_steps - 1
+    term = chaos.step_outcome(traj, last, [], [])
+    assert term.terminal and term.attempts == 1 and term.injected_faults == 0
+
+
+# ------------------------------------------------------------ chaos end to end
+
+def _chaos_pair(cfg, params):
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    rcfg = _rcfg()
+    base = run_on_sim(copy.deepcopy(batch), predictor, n_workers=2, config=rcfg)
+    faults = _chaos(base.makespan)
+    eng = make_runtime(cfg, params, copy.deepcopy(batch), predictor, n_workers=2,
+                       config=rcfg, faults=faults).run()
+    sim = run_on_sim(copy.deepcopy(batch), predictor, n_workers=2, config=rcfg,
+                     faults=faults)
+    return base, eng, sim
+
+
+def test_chaos_all_trajectories_finish_on_both_backends(setup):
+    """The tentpole acceptance: a seeded schedule with one mid-run worker death
+    and >=10% tool timeouts still drains every trajectory to FINISHED on both
+    backends, recovering residents from their tool-boundary checkpoints."""
+    cfg, params = setup
+    base, eng, sim = _chaos_pair(cfg, params)
+    for res in (eng, sim):
+        assert all(t.finished for t in res.trajectories)
+        assert res.worker_deaths == 1
+        assert res.recoveries > 0
+        assert res.injected_tool_faults > 0
+        assert res.makespan > base.makespan      # chaos is not free
+    # no token loss past the last tool boundary: every recorded step survived
+    for t in eng.trajectories:
+        assert t.tokens_generated == sum(s.gen_tokens for s in t.steps)
+        assert t.tokens_generated == t.payload.total_tokens
+
+
+def test_chaos_decision_parity_sim_vs_engine(setup):
+    """Under an infinite link both backends make identical fault decisions:
+    same deaths, same recoveries, same injected faults, same virtual makespan —
+    chaos is scheduled state, not substrate behavior."""
+    cfg, params = setup
+    _, eng, sim = _chaos_pair(cfg, params)
+    assert eng.worker_deaths == sim.worker_deaths
+    assert eng.recoveries == sim.recoveries
+    assert eng.injected_tool_faults == sim.injected_tool_faults
+    assert eng.tool_retries == sim.tool_retries
+    assert eng.makespan == sim.makespan
+
+
+def test_no_fault_path_untouched(setup):
+    """faults=None must be byte-for-byte the PR-5 behavior: zero chaos
+    telemetry and the decision-trace parity invariant intact."""
+    cfg, params = setup
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    rcfg = _rcfg(trace=True)
+    eng = make_runtime(cfg, params, copy.deepcopy(batch), predictor,
+                       n_workers=2, config=rcfg).run()
+    sim = run_on_sim(copy.deepcopy(batch), predictor, n_workers=2, config=rcfg)
+    assert eng.worker_deaths == sim.worker_deaths == 0
+    assert eng.recoveries == sim.recoveries == 0
+    assert eng.injected_tool_faults == sim.injected_tool_faults == 0
+    assert eng.trace == sim.trace and eng.makespan == sim.makespan
+
+
+def test_injected_faults_disentangled_from_plan_failures(setup):
+    """The rectification signal (plan-driven tool failures) is identical with
+    and without chaos — predictor features never see injected faults."""
+    cfg, params = setup
+    base, eng, sim = _chaos_pair(cfg, params)
+    plan_failures = {t.traj_id: t.failed_tool_calls for t in base.trajectories}
+    for res in (eng, sim):
+        for t in res.trajectories:
+            assert t.failed_tool_calls == plan_failures[t.traj_id]
+            assert t.injected_tool_faults == t.tool_retries
+    # and the feature vector itself carries no chaos channel
+    from repro.core.trajectory import FEATURE_DIM
+    t = eng.trajectories[0]
+    assert len(t.features()) == FEATURE_DIM
+
+
+# ------------------------------------------------------------ data plane units
+
+def test_checkpoint_out_keeps_lane_resident_and_restores_elsewhere(setup):
+    """checkpoint_out host-gathers without evicting; migrate_in of the package
+    on another worker reproduces the exact context tokens."""
+    from repro.engine.worker import RolloutWorker
+
+    cfg, params = setup
+    a = RolloutWorker(cfg, params, capacity=64, max_slots=2, worker_id=0)
+    b = RolloutWorker(cfg, params, capacity=64, max_slots=2, worker_id=1)
+    a.prefill(7, [5, 6, 7, 8])
+    a.decode([7], 4)
+    pkg = a.checkpoint_out(7)
+    assert 7 in a.store                          # still resident at the source
+    before = list(a.store[7].tokens)
+    a.decode([7], 2)                             # source keeps decoding
+    b.migrate_in(pkg)
+    assert list(b.store[7].tokens) == before     # boundary state, bit-exact
+    assert b.store[7].generated == pkg["generated"]
+    assert not b.store[7].preempted and not b.store[7].finished
+
+
+def test_orchestrator_all_workers_dead_raises():
+    """Killing the whole fleet is unrecoverable and must fail loudly."""
+    batch, predictor = build_workbench(n_prompts=2, group_size=2, seed=SEED)
+    faults = FaultPlan(seed=0, deaths=((0.01, 0), (0.02, 1)))
+    with pytest.raises(RuntimeError, match="dead"):
+        run_on_sim(copy.deepcopy(batch), predictor, n_workers=2,
+                   config=_rcfg(), faults=faults)
+
+
+# ------------------------------------------------------------ elastic fleets
+
+def test_elastic_reconfigure_shrink_and_grow(setup):
+    """The dynamic case of Algorithm 2: a death shrinks the budget and the
+    fleet re-partitions onto survivors (residents redistribute, worker_id
+    re-pointed); recovery grows it back."""
+    from repro.engine.fleet import FleetSpec
+
+    cfg, params = setup
+    batch, predictor = build_workbench(n_prompts=4, group_size=2, seed=SEED)
+    rt = make_runtime(cfg, params, batch, predictor, n_workers=3,
+                      config=_rcfg(migration=False))
+    res = rt.run()
+    assert all(t.finished for t in res.trajectories)
+    report = rt.reconfigure(FleetSpec.homogeneous(2), calibrate=False)
+    assert report["to"] == [1, 1]
+    assert len(rt.workers) == 2
+    assert all(t.worker_id is None or t.worker_id < 2 for t in rt.trajs)
+    report = rt.reconfigure(FleetSpec.homogeneous(3), calibrate=False)
+    assert report["to"] == [1, 1, 1]
+    assert len(rt.workers) == 3
+
+
+def test_reconfigure_budget_override(setup):
+    """reconfigure(budget=...) provisions Algorithm 2 under the shrunken
+    budget without permanently mutating the controller."""
+    cfg, params = setup
+    batch, predictor = build_workbench(n_prompts=4, group_size=2, seed=SEED)
+    rt = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                      config=_rcfg(migration=False))
+    rt.run()
+    before = rt.controller.gpu_budget
+    report = rt.reconfigure(budget=1, calibrate=False)
+    assert sum(report["to"]) <= 1
+    assert rt.controller.gpu_budget == before    # override did not stick
