@@ -26,10 +26,9 @@ from __future__ import annotations
 
 import argparse
 import copy
-import json
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json_atomic
 
 SEED = 5
 
@@ -146,8 +145,7 @@ def run(smoke: bool = False, seed: int = SEED,
                           "slowdown_vs_clean": r["makespan_s"] / base})
         results["goodput_vs_fault_rate"] = sweep
 
-    with open(json_path, "w") as f:
-        json.dump(results, f, indent=2)
+    write_json_atomic(json_path, results)
 
     eng = per_backend["engine"]
     emit([

@@ -19,14 +19,13 @@ Emits ``name,us_per_call,derived`` CSV rows and writes ``BENCH_prefill.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, write_json_atomic
 from repro.configs import get_config
 from repro.engine import worker as W
 from repro.engine.sampler import SamplerConfig
@@ -118,8 +117,7 @@ def run(fast: bool = True, smoke: bool = False,
         "reused_tokens": wg.reused_tokens,
     }
 
-    with open(json_path, "w") as f:
-        json.dump(results, f, indent=2)
+    write_json_atomic(json_path, results)
 
     emit([
         ("prefill_compiles_legacy", 0.0,

@@ -30,12 +30,11 @@ drains on both fleets and the heterogeneous makespan does not regress.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
 import jax
 
-from benchmarks.common import Workbench, emit
+from benchmarks.common import Workbench, emit, write_json_atomic
 from repro.configs import get_config
 from repro.engine.fleet import FleetSpec
 from repro.engine.runtime import RuntimeConfig, build_workbench, make_runtime
@@ -157,8 +156,7 @@ def run(fast: bool | None = None, smoke: bool = False, full: bool = False,
     }
     if full:
         results["control_plane_rows"] = [list(r) for r in run_control_plane(False)]
-    with open(json_path, "w") as f:
-        json.dump(results, f, indent=2)
+    write_json_atomic(json_path, results)
 
     emit([
         ("resources_makespan_het_4211", het["makespan_s"] * 1e6,

@@ -34,10 +34,9 @@ CSV rows and writes ``BENCH_rollout.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json_atomic
 
 SEED = 5                       # seeded long-tail workload the comparison is on
 
@@ -166,8 +165,7 @@ def run(smoke: bool = False, seed: int = SEED, backend: str = "engine",
             f"analytic twin no longer predicts engine policy ordering "
             f"(engine {eng_ms}, sim {sim_ms})")
 
-    with open(json_path, "w") as f:
-        json.dump(results, f, indent=2)
+    write_json_atomic(json_path, results)
 
     emit([
         ("rollout_makespan_pps_migration", pps["makespan_s"] * 1e6,

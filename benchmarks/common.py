@@ -8,6 +8,8 @@ derived = the figure's headline metric, e.g. throughput or speedup).
 from __future__ import annotations
 
 import copy
+import json
+import os
 import time
 from dataclasses import dataclass
 
@@ -55,6 +57,21 @@ def system_configs(gpu_budget: int = 64, max_batch: int = 100, mp_base: int = 1)
         "slime": dict(scheduler="rr", placement="least_load", degrees=homog,
                       gpu_budget=gpu_budget, max_batch=max_batch),
     }
+
+
+def write_json_atomic(path: str, obj) -> None:
+    """Serialize ``obj`` to ``path`` crash-atomically.
+
+    Writes to a sibling temp file and swaps with ``os.replace`` (same idiom as
+    ``repro.checkpoint``), so a benchmark killed mid-dump never leaves a
+    truncated BENCH_*.json behind — readers see the old file or the new one.
+    """
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def emit(rows: list[tuple], header: bool = False) -> None:

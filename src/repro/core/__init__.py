@@ -9,6 +9,8 @@
   controller        — control plane + baseline routing policies (§3, §7)
   faults            — deterministic chaos schedules + tool retry discipline
                       (worker death/revival, injected tool timeouts/errors)
+  tenancy           — tenant/SLA classes + serving-time overload policy
+                      (admission control, backpressure, degradation ladder)
   orchestrator      — THE event loop: one lifecycle state machine driving a
                       pluggable ExecutionBackend (engine.backends: the analytic
                       SimBackend and the real-worker EngineBackend), so every
@@ -33,8 +35,11 @@ from repro.core.resource_manager import (AllocationResult, WorkerLatencyModel,
                                          homogeneous_allocation, sort_initialized_sa)
 from repro.core.scheduler import (FCFSScheduler, PPSScheduler, RoundRobinScheduler,
                                   SJFScheduler, make_scheduler)
+from repro.core.tenancy import (DEFAULT_TENANTS, ServingConfig, TenantClass,
+                                assign_tenants, parse_tenants)
 from repro.core.trajectory import StepRecord, Trajectory, TrajectoryPhase, make_group
-from repro.core.controller import (CacheAffinityRouting, HeddleConfig,
-                                   HeddleController, HybridRouting, LeastLoadRouting)
+from repro.core.controller import (AdmissionDecision, CacheAffinityRouting,
+                                   HeddleConfig, HeddleController, HybridRouting,
+                                   LeastLoadRouting)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

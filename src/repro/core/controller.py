@@ -18,7 +18,8 @@ Baseline policies reproduce the paper's comparison systems on identical substrat
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, field
 from typing import Optional, Protocol, Sequence
 
 import numpy as np
@@ -29,6 +30,7 @@ from repro.core.placement import InterferenceModel
 from repro.core.predictor import ProgressivePredictor
 from repro.core.resource_manager import (WorkerLatencyModel, homogeneous_allocation,
                                          sort_initialized_sa)
+from repro.core.tenancy import ServingConfig
 from repro.core.trajectory import Trajectory
 
 
@@ -95,6 +97,19 @@ class HeddleConfig:
     max_group_count: float | None = None  # worker batch-slot capacity (DP group cap)
     work_aware_dp: bool = True            # beyond-paper DP cost (EXPERIMENTS.md §Perf);
                                           # False = paper-faithful Formula 2
+    # open-loop serving policy (admission control, backpressure, degradation
+    # ladder); the default ServingConfig disables all of it
+    serving: ServingConfig = field(default_factory=ServingConfig)
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Admission gate verdict for one open-loop arrival."""
+
+    action: str                 # "admit" | "shed" | "defer"
+    worker: int = -1            # placement when admitted
+    reason: str = ""            # gate that fired ("queue_full", "deadline", ...)
+    eta: float = 0.0            # predicted completion time (deadline gate only)
 
 
 class HeddleController:
@@ -127,6 +142,14 @@ class HeddleController:
         # transmission scheduler later drops must not leak worker counts
         self._pending_migration: dict[int, MigrationRequest] = {}
         self._dead_workers: set[int] = set()  # fault layer: no placements here
+        # ---- open-loop serving state (inert until begin_serving) ----------
+        self._serving = False
+        self._max_active = 1                      # decode slots per worker
+        self.tenant_stats: dict[str, dict] = {}   # per-tenant latency accounting
+        self._arrived_ids: set[int] = set()       # first-arrival dedup (deferrals re-enter)
+        self.shed_log: list[tuple[int, str]] = [] # (traj_id, reason), decision order
+        self.peak_global_count = 0                # queue-bound property-test watermarks
+        self.peak_worker_count = 0
 
     # ------------------------------------------------------------ telemetry (measured)
     def record_worker_stats(self, worker_id: int, stats: dict) -> None:
@@ -260,6 +283,7 @@ class HeddleController:
                 trajectories[idx].worker_id = w
         # incremental rank-tracking state (see on_step_complete)
         self._slots = {t.traj_id: i for i, t in enumerate(trajectories)}
+        self._n_slots = len(trajectories)
         self._pred_totals = np.asarray([t.predicted_total for t in trajectories])
         self._live = np.ones(len(trajectories), dtype=bool)
         # per-worker live-trajectory counts (migration load feedback)
@@ -326,6 +350,11 @@ class HeddleController:
         if loads[target] + self.config.migration_load_gap \
                 > loads[traj.worker_id]:
             return None
+        # backpressure: a migration must not push the target over its queue
+        # bound (unbounded by default, so closed-loop behavior is unchanged)
+        if float(self._worker_count[target]) + 1.0 \
+                > self.config.serving.queue_bound_per_worker:
+            return None
         if target != traj.worker_id:
             # hysteresis: only migrate when the prediction moved materially since the
             # last migration decision — rank jitter at group boundaries otherwise
@@ -379,6 +408,16 @@ class HeddleController:
         if getattr(self, "_worker_count", None) is not None and traj.worker_id is not None \
                 and traj.worker_id < len(self._worker_count):
             self._worker_count[traj.worker_id] -= 1
+        if self._serving:
+            ts = self._tstat(traj.tenant)
+            ts["finished"] += 1
+            ts["latencies"].append(traj.completion_time())
+            if traj.finish_time <= traj.slo_deadline:
+                ts["deadline_met"] += 1
+
+    def on_degrade(self, traj: Trajectory) -> None:
+        """Tenant accounting for a ladder level-2 step-budget tightening."""
+        self._tstat(traj.tenant)["degraded"] += 1
 
     # ------------------------------------------------------------ faults (elasticity)
     def mark_worker_dead(self, worker_id: int) -> None:
@@ -406,6 +445,222 @@ class HeddleController:
             self._worker_count[src] -= 1
         if dst < len(self._worker_count):
             self._worker_count[dst] += 1
+
+    # ------------------------------------------------------- serving (open loop)
+    def begin_serving(self, max_active: int) -> None:
+        """Enter open-loop mode: empty rank state, arrivals admitted one by one.
+
+        The closed-loop path sizes its rank-tracking arrays in
+        :meth:`initial_placement` from the whole batch; a serving front door
+        sees trajectories only as they arrive, so the dense arrays start empty
+        and grow geometrically (padding slots stay ``live=False`` so every
+        closed-loop vector op still works unchanged).
+        """
+        m = len(self.degrees) if self.degrees else (self.max_workers or 1)
+        self._serving = True
+        self._max_active = max(int(max_active), 1)
+        self.groups = [[] for _ in range(m)]
+        # equal nominal capacities: open loop has no batch presort to derive
+        # group sizes from, so rank-scaled migration maps ranks uniformly
+        self.capacity_router = ScaledCapacityRouter([1.0] * m)
+        self._traj_index = {}
+        self._slots: dict[int, int] = {}
+        self._n_slots = 0
+        self._pred_totals = np.zeros(0, dtype=float)
+        self._live = np.zeros(0, dtype=bool)
+        self._worker_count = np.zeros(m, dtype=np.int64)
+        if self.degrees and len(self.degrees) == m:
+            tts = np.asarray(self.latency.token_times(self.degrees), dtype=float)
+            self._load_weight = tts / tts.min()
+        else:
+            self._load_weight = np.ones(m, dtype=float)
+        self._finished_ids.clear()
+        self._pending_migration.clear()
+        self.tenant_stats.clear()
+        self._arrived_ids.clear()
+        self.shed_log.clear()
+        self.peak_global_count = 0
+        self.peak_worker_count = 0
+
+    def _tstat(self, tenant: str) -> dict:
+        return self.tenant_stats.setdefault(tenant, {
+            "arrived": 0, "admitted": 0, "deferred": 0, "shed": 0,
+            "finished": 0, "deadline_met": 0, "degraded": 0, "latencies": [],
+        })
+
+    def _abs_token_time(self, worker_id: int) -> float:
+        """Absolute per-token seconds on one worker (admission-gate pricing)."""
+        if self.degrees and worker_id < len(self.degrees):
+            return float(self.latency.base_token_time(self.degrees[worker_id]))
+        return float(self.latency.t1)
+
+    def service_estimate(self, traj: Trajectory, worker_id: int) -> float:
+        """Predicted seconds to drain ``traj`` on ``worker_id`` at current load.
+
+        Processor-sharing approximation: predicted remaining tokens priced at
+        the worker's token time, stretched by the residents it would share the
+        worker with.  Deliberately deterministic and cheap — this is the
+        admission gate's completion-time oracle, not a simulator.
+        """
+        tokens = max(float(traj.predicted_remaining), 1.0)
+        sharing = 1.0 + float(self._worker_count[worker_id])
+        return tokens * self._abs_token_time(worker_id) * sharing
+
+    def edf_boost(self, traj: Trajectory, now: float) -> float:
+        """EDF urgency term blended into the PPS priority at submit time.
+
+        urgency = predicted service time / remaining slack (capped): a request
+        whose slack is shrinking toward its service demand outranks peers of
+        equal predicted length, so deadlines shape preemption without
+        abandoning the paper's LPT core.  Scale-matched to predicted_total so
+        the boost competes in the same units as the base priority.
+        """
+        cfg = self.config.serving
+        if cfg.edf_weight <= 0.0 or not math.isfinite(traj.slo_deadline):
+            return 0.0
+        fastest = min((self._abs_token_time(w)
+                       for w in range(len(self._worker_count))
+                       if w not in self._dead_workers),
+                      default=self._abs_token_time(0))
+        service = max(float(traj.predicted_remaining), 1.0) * fastest
+        slack = traj.slo_deadline - now
+        urgency = cfg.edf_urgency_cap if slack <= 0.0 else \
+            min(service / slack, cfg.edf_urgency_cap)
+        return cfg.edf_weight * urgency * max(traj.predicted_total, 1.0)
+
+    def pressure(self) -> float:
+        """Live work vs decode capacity: 1.0 = every slot on every alive worker
+        is spoken for; the degradation ladder triggers on this."""
+        alive = len(self._worker_count) - len(self._dead_workers)
+        capacity = max(alive, 1) * self._max_active
+        return float(self._live.sum()) / capacity
+
+    def admit_arrival(self, traj: Trajectory, now: float) -> AdmissionDecision:
+        """Admission gate for one open-loop arrival (possibly a deferred retry).
+
+        Order of gates: (1) backpressure — bounded global/per-worker queues;
+        a full queue sheds sheddable work and defers the rest.  (2) deadline
+        gate — predict completion from the progressive predictor + current
+        fast-worker-equivalent loads; a sheddable arrival that cannot meet its
+        SLO is rejected at the door (finishing it late helps nobody and its
+        service time would push *other* tenants over).  Gold-tier work is
+        never shed here, whatever the prediction says.
+        """
+        cfg = self.config.serving
+        ts = self._tstat(traj.tenant)
+        if traj.traj_id not in self._arrived_ids:
+            self._arrived_ids.add(traj.traj_id)
+            ts["arrived"] += 1
+        traj.predicted_remaining = self.predictor.predict(traj)
+        traj.priority = traj.predicted_total
+        alive = [w for w in range(len(self._worker_count))
+                 if w not in self._dead_workers]
+        if not alive:
+            ts["deferred"] += 1
+            return AdmissionDecision("defer", reason="no_alive_worker")
+        loads = (self._worker_count * self._load_weight).astype(float)
+        if self._dead_workers:
+            loads[list(self._dead_workers)] = np.inf
+        worker = int(np.argmin(loads))
+        full = (float(self._live.sum()) >= cfg.queue_bound_global
+                or float(self._worker_count[worker]) >= cfg.queue_bound_per_worker)
+        if full:
+            if traj.sheddable:
+                return AdmissionDecision("shed", reason="queue_full")
+            ts["deferred"] += 1
+            return AdmissionDecision("defer", reason="queue_full")
+        if cfg.admission_control and traj.sheddable \
+                and math.isfinite(traj.slo_deadline):
+            eta = now + self.service_estimate(traj, worker)
+            if eta > traj.slo_deadline:
+                return AdmissionDecision("shed", reason="deadline", eta=eta)
+        self._register_arrival(traj, worker)
+        ts["admitted"] += 1
+        return AdmissionDecision("admit", worker=worker)
+
+    def _register_arrival(self, traj: Trajectory, worker: int) -> None:
+        """Adopt an admitted arrival into the incremental rank/load state."""
+        if self._n_slots >= len(self._pred_totals):
+            grow = max(64, 2 * len(self._pred_totals))
+            self._pred_totals = np.concatenate(
+                [self._pred_totals, np.zeros(grow, dtype=float)])
+            self._live = np.concatenate(
+                [self._live, np.zeros(grow, dtype=bool)])
+        slot = self._n_slots
+        self._n_slots += 1
+        self._slots[traj.traj_id] = slot
+        self._pred_totals[slot] = traj.predicted_total
+        self._live[slot] = True
+        self._traj_index[traj.traj_id] = traj
+        self._worker_count[worker] += 1
+        traj.worker_id = worker
+        traj._last_migration_pred = traj.predicted_total
+        self.peak_worker_count = max(self.peak_worker_count,
+                                     int(self._worker_count.max()))
+        self.peak_global_count = max(self.peak_global_count,
+                                     int(self._live.sum()))
+
+    def on_shed(self, traj: Trajectory, now: float, reason: str,
+                admitted: bool) -> None:
+        """Load + tenant accounting for a shed decision (gate or ladder)."""
+        self.shed_log.append((traj.traj_id, reason))
+        self._tstat(traj.tenant)["shed"] += 1
+        if not admitted:
+            return
+        self.abort_migration(traj.traj_id)
+        slot = self._slots.get(traj.traj_id)
+        if slot is not None:
+            self._live[slot] = False
+        if traj.worker_id is not None and traj.worker_id < len(self._worker_count):
+            self._worker_count[traj.worker_id] -= 1
+
+    def select_shed_victims(self, candidates: Sequence[Trajectory]
+                            ) -> list[Trajectory]:
+        """Ladder level 1: pick queued sheddable work to drop, enough to bring
+        pressure back under the shed threshold.  Deterministic order — lowest
+        tier last (shed highest tier first), largest predicted remaining work
+        first within a tier, traj_id as the final tiebreak.  Gold (tier 0)
+        and non-sheddable work are never candidates."""
+        cfg = self.config.serving
+        pool = sorted((t for t in candidates
+                       if t.sheddable and t.tenant_tier > 0
+                       and not t.finished and not t.shed),
+                      key=lambda t: (-t.tenant_tier, -t.predicted_remaining,
+                                     t.traj_id))
+        alive = len(self._worker_count) - len(self._dead_workers)
+        capacity = max(alive, 1) * self._max_active
+        excess = float(self._live.sum()) - cfg.shed_pressure * capacity
+        n = min(len(pool), max(int(math.ceil(excess)), 0))
+        return pool[:n]
+
+    def select_degrade_victims(self, candidates: Sequence[Trajectory]
+                               ) -> list[Trajectory]:
+        """Ladder level 2: live non-gold trajectories whose step budget the
+        orchestrator should tighten.  Gold (tier 0) is untouchable."""
+        return [t for t in candidates
+                if t.tenant_tier > 0 and not t.degraded
+                and not t.finished and not t.shed]
+
+    def tenant_report(self) -> dict[str, dict]:
+        """Per-tenant serving metrics: completion-latency percentiles, deadline
+        attainment (a shed request counts as a missed deadline), and the
+        admit/defer/shed/degrade counters."""
+        report: dict[str, dict] = {}
+        for tenant, ts in sorted(self.tenant_stats.items()):
+            lat = np.asarray(ts["latencies"], dtype=float)
+            arrived = max(ts["arrived"], 1)
+            report[tenant] = {
+                "arrived": ts["arrived"], "admitted": ts["admitted"],
+                "deferred": ts["deferred"], "shed": ts["shed"],
+                "finished": ts["finished"], "degraded": ts["degraded"],
+                "deadline_met": ts["deadline_met"],
+                "attainment": ts["deadline_met"] / arrived,
+                "shed_rate": ts["shed"] / arrived,
+                "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+                "latency_p99_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+                "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
+            }
+        return report
 
     def _predicted_lengths(self, trajectories: Sequence[Trajectory]) -> np.ndarray:
         for t in trajectories:

@@ -37,15 +37,22 @@ import numpy as np
 # domain-separation constant for the tool-fault rng stream: keeps fault rolls
 # independent of the workload/tool rngs that also seed on (seed, traj, step)
 _TOOL_FAULT_STREAM = 7919
+# separate stream for backoff jitter: the jitter draw must not correlate with
+# the fault roll that triggered the retry
+_BACKOFF_STREAM = 104729
 
 
 @dataclass(frozen=True)
 class RetryPolicy:
-    """Capped exponential backoff for transient tool faults.
+    """Capped exponential backoff with deterministic full jitter.
 
     ``max_attempts`` bounds total tries (so injected delay is bounded);
-    attempt ``k``'s failure waits ``min(base * factor**k, cap)`` seconds
-    before the next try.
+    attempt ``k``'s failure computes a ceiling ``min(base * factor**k, cap)``
+    and — when a seed context is supplied — waits a uniform draw in
+    ``[0, ceiling]`` seeded per ``(traj, step, attempt)``.  Full jitter
+    decorrelates retries across trajectories (no synchronized retry storms
+    when a burst of calls faults together) while staying bit-reproducible on
+    both backends.  Without a seed the wait is the un-jittered ceiling.
     """
 
     max_attempts: int = 4
@@ -57,10 +64,16 @@ class RetryPolicy:
         if self.max_attempts < 1:
             raise ValueError("RetryPolicy needs at least one attempt")
 
-    def backoff(self, attempt: int) -> float:
+    def backoff(self, attempt: int, *, seed: Optional[int] = None,
+                traj_id: int = 0, step: int = 0) -> float:
         """Seconds to wait after failed attempt ``attempt`` (0-indexed)."""
-        return min(self.backoff_base * self.backoff_factor ** attempt,
-                   self.backoff_cap)
+        ceiling = min(self.backoff_base * self.backoff_factor ** attempt,
+                      self.backoff_cap)
+        if seed is None:
+            return ceiling
+        rng = np.random.default_rng(
+            (seed, _BACKOFF_STREAM, traj_id, step, attempt))
+        return ceiling * float(rng.random())
 
 
 @dataclass(frozen=True)
@@ -173,6 +186,7 @@ def resolve_tool_call(faults: Optional[FaultPlan], retry: RetryPolicy,
         else:
             total += base_latency
             errors += 1
-        total += retry.backoff(attempt)
+        total += retry.backoff(attempt, seed=faults.seed,
+                               traj_id=traj_id, step=step)
     total += base_latency
     return ToolCallTrace(total, timeouts + errors + 1, timeouts, errors)

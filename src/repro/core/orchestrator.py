@@ -86,8 +86,9 @@ class ExecutionBackend(Protocol):
     @property
     def n_workers(self) -> int: ...
 
-    def admit(self, trajectories: Sequence[Trajectory]) -> None:
-        """One-time batch admission (e.g. prompt prefill), charged to clocks."""
+    def admit(self, trajectories: Sequence[Trajectory], now: float = 0.0) -> None:
+        """Admission (e.g. prompt prefill) charged to clocks: the whole batch
+        at t=0 closed loop, or one arrival at a time (at ``now``) open loop."""
         ...
 
     def ready_time(self, wid: int, now: float) -> float:
@@ -162,6 +163,7 @@ class OrchestratorConfig:
     scheduler: str = "pps"  # pps | fcfs | rr | sjf (per-worker queues)
     migration: bool = True  # tool-interval migration (§5.3)
     max_active: int = 4  # concurrent generation slots per worker
+    open_loop: bool = False  # serve an arrival process instead of a t=0 batch
     preemption_margin: float = 1.0  # PPS hysteresis (multiplicative)
     preemption_floor: float = 1.0  # PPS hysteresis (additive)
     max_events: int = 2_000_000  # runaway-loop guard
@@ -185,6 +187,15 @@ class OrchestratorResult:
     recoveries: int = 0  # trajectory re-admissions from a checkpoint
     tool_retries: int = 0  # injected-fault retry attempts across the batch
     injected_tool_faults: int = 0  # injected timeouts + transient errors
+    # serving telemetry (all zero/empty on a closed-loop run)
+    arrivals: int = 0  # open-loop arrival events handled (deferrals excluded)
+    admitted: int = 0
+    shed: int = 0  # dropped by the admission gate or the ladder
+    deferred: int = 0  # admissions pushed back by backpressure
+    degraded: int = 0  # step budgets tightened by ladder level 2
+    peak_live_global: int = 0  # high-water mark of concurrently live trajs
+    peak_live_worker: int = 0  # high-water mark on any single worker
+    tenant_report: dict = field(default_factory=dict)
 
 
 class _WorkerLane:
@@ -251,6 +262,11 @@ class Orchestrator:
         self.migrations = 0
         self.worker_deaths = 0
         self.recoveries = 0
+        self.arrivals = 0
+        self.admitted = 0
+        self.shed_count = 0
+        self.deferred = 0
+        self.degraded = 0
         self.events = 0
         self.trace: list[tuple[str, int, int]] = []
         self.timeline: list[tuple[float, int]] = []
@@ -297,6 +313,10 @@ class Orchestrator:
         """Queue the trajectory's next generation step on its current worker."""
         lane = self.lanes[traj.worker_id]
         traj._queued_at = now
+        if self.cfg.open_loop and self.controller is not None:
+            # EDF blend: refresh the urgency boost each time the trajectory
+            # (re-)enters a queue, so shrinking slack steadily raises priority
+            traj.slo_boost = self.controller.edf_boost(traj, now)
         lane.scheduler.submit(traj, now)
         if self.backend.interruptible:
             self._worker_pass(lane, now)
@@ -523,7 +543,7 @@ class Orchestrator:
             self._mid_step.discard(traj.traj_id)  # partial step is gone: fresh redo
             self._recover(traj, now, resubmit=True)
         for traj in self.trajs:
-            if traj.finished:
+            if traj.finished or traj.shed:
                 continue
             tid = traj.traj_id
             if tid in self.in_flight and self.in_flight[tid][0] == wid:
@@ -550,6 +570,8 @@ class Orchestrator:
             ):
                 # resident parked at a tool boundary: its KV died with the worker
                 self._recover(traj, now, resubmit=False)
+        # losing a worker shrinks capacity: re-check the overload ladder
+        self._degradation_ladder(now)
 
     def _on_worker_up(self, wid: int, now: float) -> None:
         lane = self.lanes[wid]
@@ -573,22 +595,115 @@ class Orchestrator:
         self.backend.tool_absorb(traj)
         self._submit(traj, now)
 
+    # ------------------------------------------------------------ serving (open loop)
+    def _on_arrival(self, tid: int, now: float) -> None:
+        """One open-loop arrival (or a deferred retry) hits the front door."""
+        traj = self.by_id[tid]
+        first = traj.deferrals == 0
+        if first:
+            self.arrivals += 1
+            self._note("arrival", tid, -1)
+        if self.controller is None:
+            # baseline routing has no admission policy: place and go
+            traj.predicted_remaining = self.predictor.predict(traj)
+            traj.priority = traj.predicted_total
+            traj.worker_id = int(self.routing.initial_worker(traj, self._loads()))
+            self.backend.admit([traj], now)
+            self.admitted += 1
+            self._note("admit", tid, traj.worker_id)
+            self._submit(traj, now)
+            return
+        decision = self.controller.admit_arrival(traj, now)
+        if decision.action == "shed":
+            self._shed(traj, now, decision.reason, admitted=False)
+            return
+        if decision.action == "defer":
+            traj.deferrals += 1
+            self.deferred += 1
+            self._note("defer", tid, -1)
+            self._push(now + self.controller.config.serving.defer_seconds,
+                       "arrival", tid)
+            return
+        self.backend.admit([traj], now)
+        self.admitted += 1
+        self._note("admit", tid, decision.worker)
+        self._submit(traj, now)
+        self._degradation_ladder(now)
+
+    def _shed(self, traj: Trajectory, now: float, reason: str,
+              admitted: bool) -> None:
+        """Drop one trajectory (admission gate or ladder level 1)."""
+        tid = traj.traj_id
+        if admitted:
+            # it only ever sheds from a queue (PENDING/PREEMPTED): pull the
+            # scheduler entry and free whatever lane state the backend holds
+            self.lanes[traj.worker_id].scheduler.remove(traj)
+            self._mid_step.discard(tid)
+            self.backend.release(traj)
+        if self.controller is not None:
+            self.controller.on_shed(traj, now, reason, admitted)
+        traj.shed = True
+        traj.shed_reason = reason
+        traj.finish_time = now
+        traj.phase = TrajectoryPhase.SHED
+        self.shed_count += 1
+        self._note("shed", tid, traj.worker_id if admitted else -1)
+
+    def _degradation_ladder(self, now: float) -> None:
+        """Graceful degradation under sustained overload (two levels).
+
+        Level 1 (pressure >= shed_pressure): shed queued sheddable work,
+        highest tier first, until pressure returns under the threshold.
+        Level 2 (pressure >= degrade_pressure): tighten the step budget of
+        live non-gold trajectories (they finish at their current-or-next tool
+        boundary).  Gold tier is untouchable at every level; every decision
+        lands in the trace, so sim/engine parity covers the ladder too.
+        """
+        ctl = self.controller
+        if ctl is None or not self.cfg.open_loop:
+            return
+        scfg = ctl.config.serving
+        if ctl.pressure() >= scfg.shed_pressure:
+            queued: list[Trajectory] = []
+            for lane in self.lanes:
+                if lane.alive:
+                    queued.extend(lane.scheduler.queued())
+            for victim in ctl.select_shed_victims(queued):
+                self._shed(victim, now, "overload", admitted=True)
+        if ctl.pressure() >= scfg.degrade_pressure:
+            live = [t for t in self.trajs if not t.finished and not t.shed]
+            for traj in ctl.select_degrade_victims(live):
+                traj.step_cap = traj.num_steps + scfg.degrade_step_grace
+                traj.degraded = True
+                self.degraded += 1
+                ctl.on_degrade(traj)
+                self._note("degrade", traj.traj_id, traj.worker_id
+                           if traj.worker_id is not None else -1)
+
     # ------------------------------------------------------------ run
     def run(self) -> OrchestratorResult:
-        for t in self.trajs:
-            t.predicted_remaining = self.predictor.predict(t)
-            t.priority = t.predicted_total
-            t.submit_time = 0.0
-        if self.routing is not None:
-            loads = np.zeros(len(self.lanes))
+        if self.cfg.open_loop:
+            # serving: trajectories arrive over time (submit_time stamped by an
+            # ArrivalPolicy); placement and admission happen per arrival
+            if self.controller is not None:
+                self.controller.begin_serving(self.cfg.max_active)
             for t in self.trajs:
-                t.worker_id = int(self.routing.initial_worker(t, loads))
-                loads[t.worker_id] += 1
+                self._push(t.submit_time, "arrival", t.traj_id)
         else:
-            self.controller.initial_placement(self.trajs)
-        self.backend.admit(self.trajs)
-        for t in self.trajs:
-            self._submit(t, 0.0)
+            for t in self.trajs:
+                t.predicted_remaining = self.predictor.predict(t)
+                t.priority = t.predicted_total
+                t.submit_time = 0.0
+            if self.routing is not None:
+                loads = np.zeros(len(self.lanes))
+                for t in self.trajs:
+                    t.worker_id = int(self.routing.initial_worker(t, loads))
+                    loads[t.worker_id] += 1
+            else:
+                self.controller.initial_placement(self.trajs)
+            self.backend.admit(self.trajs)
+            for t in self.trajs:
+                self._submit(t, 0.0)
         if self.faults is not None:
             # the chaos schedule rides the same versioned heap as everything else
             for t, wid in self.faults.deaths:
@@ -616,6 +731,8 @@ class Orchestrator:
             elif kind == "restore_done":
                 tid, token = payload
                 self._on_restore_done(tid, token, now)
+            elif kind == "arrival":
+                self._on_arrival(payload, now)
             elif kind == "worker_death":
                 self._on_worker_death(payload, now)
             elif kind == "worker_up":
@@ -623,7 +740,7 @@ class Orchestrator:
             if self.cfg.timeline_every and self.events % self.cfg.timeline_every == 0:
                 self.timeline.append((now, sum(1 for t in self.trajs if not t.finished)))
 
-        unfinished = [t.traj_id for t in self.trajs if not t.finished]
+        unfinished = [t.traj_id for t in self.trajs if not t.finished and not t.shed]
         assert not unfinished, f"orchestrator drained with live trajectories {unfinished}"
         delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
         return OrchestratorResult(
@@ -640,4 +757,18 @@ class Orchestrator:
             recoveries=self.recoveries,
             tool_retries=sum(t.tool_retries for t in self.trajs),
             injected_tool_faults=sum(t.injected_tool_faults for t in self.trajs),
+            arrivals=self.arrivals,
+            admitted=self.admitted,
+            shed=self.shed_count,
+            deferred=self.deferred,
+            degraded=self.degraded,
+            peak_live_global=(self.controller.peak_global_count
+                              if self.cfg.open_loop and self.controller
+                              is not None else 0),
+            peak_live_worker=(self.controller.peak_worker_count
+                              if self.cfg.open_loop and self.controller
+                              is not None else 0),
+            tenant_report=(self.controller.tenant_report()
+                           if self.cfg.open_loop and self.controller is not None
+                           else {}),
         )

@@ -87,6 +87,10 @@ class _HeapScheduler:
     def preempt_victim(self, active: list[Trajectory]) -> Optional[Trajectory]:
         return None
 
+    def queued(self) -> list[Trajectory]:
+        """Live queued trajectories (insertion order) — degradation-ladder input."""
+        return [e.traj for e in self._entries.values()]
+
     def __len__(self) -> int:
         return len(self._entries)
 
@@ -112,7 +116,12 @@ class PPSScheduler(_HeapScheduler):
         self.preemption_floor = preemption_floor
 
     def submit(self, traj: Trajectory, now: float) -> None:  # Alg.1 lines 1-4
-        traj.priority = traj.predicted_total
+        # Serving blend: tenant weight scales the LPT term and an EDF urgency
+        # boost (computed by the controller at submit time) pulls deadline-
+        # critical work forward.  Closed-loop defaults (weight 1, boost 0)
+        # reduce to the paper's pure predicted-total priority.
+        traj.priority = (traj.priority_weight * traj.predicted_total
+                         + traj.slo_boost)
         super().submit(traj, now)
 
     def _key(self, traj: Trajectory, now: float) -> tuple:

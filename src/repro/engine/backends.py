@@ -180,7 +180,7 @@ class SimBackend:
         return len(self.workers)
 
     # ------------------------------------------------------------ admission
-    def admit(self, trajectories: Sequence[Trajectory]) -> None:
+    def admit(self, trajectories: Sequence[Trajectory], now: float = 0.0) -> None:
         if self.quantum is None:
             return  # paper mode prices prefill per step (cache model)
         for t in trajectories:
@@ -190,7 +190,11 @@ class SimBackend:
                 if self.prompt_lens is not None
                 else t.prompt_tokens
             )
-            w.clock += admission_seconds(n, w.token_time, self.prefill_speedup)
+            # open loop: an idle clock can lag the arrival instant — prefill
+            # starts at max(clock, now).  Closed loop (now=0) is unchanged.
+            w.clock = max(w.clock, now) + admission_seconds(
+                n, w.token_time, self.prefill_speedup
+            )
 
     def ready_time(self, wid: int, now: float) -> float:
         return max(now, self.workers[wid].clock) if self.quantum else now
@@ -278,7 +282,11 @@ class SimBackend:
         plan = traj.payload
         s = traj.num_steps
         lat = float(plan.tool_latency[s]) * self.latency_scale
-        terminal = s + 1 >= plan.num_steps
+        # step_cap first: a degraded trajectory ends at its tightened budget
+        # regardless of the plan — the engine's step_outcome orders the check
+        # identically, so injection arithmetic stays bit-equal across backends
+        terminal = (traj.step_cap is not None and s + 1 >= traj.step_cap) \
+            or s + 1 >= plan.num_steps
         attempts, injected = 1, 0
         if not terminal:
             # identical injection arithmetic to ToolEnvironment.invoke (terminal
@@ -312,7 +320,9 @@ class SimBackend:
         self.cache_home[traj.traj_id] = {dst}  # the KV moved with the trajectory
 
     def release(self, traj: Trajectory) -> None:
-        pass
+        # shed-from-queue cleanup: a preempted victim leaves suspended work
+        self.suspended.pop(traj.traj_id, None)
+        self._gen_time.pop(traj.traj_id, None)
 
     def stats(self, wid: int) -> dict:
         return {}  # nothing measured: the cost model *is* the assumption
@@ -435,10 +445,12 @@ class EngineBackend:
         return len(self.views)
 
     # ------------------------------------------------------------ admission
-    def admit(self, trajectories: Sequence[Trajectory]) -> None:
+    def admit(self, trajectories: Sequence[Trajectory], now: float = 0.0) -> None:
         """Prefill each worker's group up front (lanes are memory; the
         scheduler gates decode *compute*).  Sibling-adjacent order maximizes
-        radix-cache implants; admission cost lands on the worker's clock."""
+        radix-cache implants; admission cost lands on the worker's clock —
+        from ``max(clock, now)`` so open-loop arrivals on an idle worker
+        start prefilling at the arrival instant (closed loop: now=0)."""
         for view in self.views:
             mine = [t for t in trajectories if t.worker_id == view.wid]
             mine.sort(key=lambda t: (t.prompt_id, t.sample_id))
@@ -446,7 +458,7 @@ class EngineBackend:
             for t in mine:
                 toks = self.prompts[t.traj_id]
                 view.engine.prefill(t.traj_id, toks)
-                view.clock += admission_seconds(
+                view.clock = max(view.clock, now) + admission_seconds(
                     len(toks), view.token_time, self.prefill_speedup
                 )
             self.wall += time.perf_counter() - t0
@@ -556,10 +568,16 @@ class EngineBackend:
         self.wall += time.perf_counter() - t0
 
     def release(self, traj: Trajectory) -> None:
-        """Finished: the lane retires into the radix cache (prefix stays warm)."""
+        """Finished (or shed): the lane retires into the radix cache (prefix
+        stays warm).  Shed-from-queue cleanup also drops any mid-step budget
+        and parked tool output the trajectory left behind."""
         self.views[traj.worker_id].engine.release(traj.traj_id)
         self.ckpts.pop(traj.traj_id, None)
         self.last_absorb.pop(traj.traj_id, None)
+        self.step_remaining.pop(traj.traj_id, None)
+        self._step_gen.pop(traj.traj_id, None)
+        self._gen_time.pop(traj.traj_id, None)
+        self.pending_tool.pop(traj.traj_id, None)
 
     def stats(self, wid: int) -> dict:
         return self.views[wid].engine.dispatch_stats()

@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.controller import HeddleController
 from repro.core.faults import FaultPlan, RetryPolicy, resolve_tool_call
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig, OrchestratorResult
+from repro.core.tenancy import ServingConfig
 from repro.core.trajectory import Trajectory
 from repro.engine.backends import EngineBackend, SimBackend
 from repro.engine.fleet import FleetSpec, RolloutFleet
@@ -67,6 +68,8 @@ class RuntimeConfig:
     trace: bool = False                  # record the decision trace (parity harness)
     seed: int = 0
     checkpoint_dir: str | None = None    # persist tool-boundary checkpoints here
+    open_loop: bool = False              # serve arrival-stamped trajectories
+                                         # (submit_time) instead of a t=0 batch
 
 
 @dataclass
@@ -89,6 +92,15 @@ class RuntimeResult:
     recoveries: int = 0
     tool_retries: int = 0
     injected_tool_faults: int = 0
+    # serving telemetry (all zero/empty on a closed-loop run)
+    arrivals: int = 0
+    admitted: int = 0
+    shed: int = 0
+    deferred: int = 0
+    degraded: int = 0
+    peak_live_global: int = 0
+    peak_live_worker: int = 0
+    tenant_report: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -158,9 +170,13 @@ class ToolEnvironment:
 
         The terminal step's tool ends the episode: its plan outcome is recorded
         for predictor-feature parity (harvest replays it too) but the
-        environment is never invoked — no tool actually runs."""
+        environment is never invoked — no tool actually runs.  A degraded
+        trajectory's tightened ``step_cap`` terminates ahead of the plan; the
+        check is ordered identically to ``SimBackend.tool_submit`` so fault
+        injection stays bit-equal across backends."""
         plan: TrajectoryPlan = traj.payload
-        if step + 1 >= plan.num_steps:
+        if (traj.step_cap is not None and step + 1 >= traj.step_cap) \
+                or step + 1 >= plan.num_steps:
             return ToolResult(float(plan.tool_latency[step]) * self.latency_scale,
                               bool(plan.tool_failed[step]),
                               [0] * int(plan.tool_output_tokens[step]),
@@ -264,7 +280,8 @@ def build_workbench(task: str = "coding", n_prompts: int = 6, group_size: int = 
 
 def _make_controller(predictor, config: RuntimeConfig, spec: FleetSpec, *,
                      migration_load_gap: int = 1, migration_cooldown_steps: int = 1,
-                     rank_hysteresis: float = 0.2) -> HeddleController:
+                     rank_hysteresis: float = 0.2,
+                     serving: "ServingConfig | None" = None) -> HeddleController:
     """One controller construction for the real fleet AND its analytic twin.
 
     Gates default to small-cluster values (load gap 1, short cooldown): at a
@@ -282,7 +299,9 @@ def _make_controller(predictor, config: RuntimeConfig, spec: FleetSpec, *,
                             migration=config.migration,
                             migration_load_gap=migration_load_gap,
                             migration_cooldown_steps=migration_cooldown_steps,
-                            rank_hysteresis=rank_hysteresis),
+                            rank_hysteresis=rank_hysteresis,
+                            serving=serving if serving is not None
+                            else ServingConfig()),
         max_workers=spec.n_workers)
 
 
@@ -292,7 +311,8 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                  migration_load_gap: int = 1, migration_cooldown_steps: int = 1,
                  rank_hysteresis: float = 0.2, temperature: float = 0.8,
                  devices=None, faults: FaultPlan | None = None,
-                 retry: RetryPolicy = RetryPolicy()) -> "RolloutRuntime":
+                 retry: RetryPolicy = RetryPolicy(),
+                 serving: ServingConfig | None = None) -> "RolloutRuntime":
     """Wire controller + real worker fleet + tool environment into a RolloutRuntime.
 
     ``fleet`` is the per-worker MP degree spec (§6); omitted, it defaults to a
@@ -307,7 +327,8 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
     controller = _make_controller(predictor, config, spec,
                                   migration_load_gap=migration_load_gap,
                                   migration_cooldown_steps=migration_cooldown_steps,
-                                  rank_hysteresis=rank_hysteresis)
+                                  rank_hysteresis=rank_hysteresis,
+                                  serving=serving)
     cap = max(capacity or 0, required_capacity(batch))
     if max(spec.degrees) > 1:            # KV capacity shards evenly on the model axis
         cap = -(-cap // max(spec.degrees)) * max(spec.degrees)
@@ -328,7 +349,8 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
                migration_cooldown_steps: int = 1, rank_hysteresis: float = 0.2,
                prompt_lens: dict[int, int] | None = None,
                faults: FaultPlan | None = None,
-               retry: RetryPolicy = RetryPolicy()) -> OrchestratorResult:
+               retry: RetryPolicy = RetryPolicy(),
+               serving: ServingConfig | None = None) -> OrchestratorResult:
     """Run a runtime configuration on the analytic twin — no model, no engine.
 
     Builds the exact controller ``make_runtime`` would and a ``SimBackend`` in
@@ -344,7 +366,8 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
     controller = _make_controller(predictor, config, spec,
                                   migration_load_gap=migration_load_gap,
                                   migration_cooldown_steps=migration_cooldown_steps,
-                                  rank_hysteresis=rank_hysteresis)
+                                  rank_hysteresis=rank_hysteresis,
+                                  serving=serving)
     controller.degrees = list(spec.degrees)
     lat = controller.latency
     token_times = [config.token_time * lat.base_token_time(mp)
@@ -360,6 +383,7 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
         backend, batch,
         OrchestratorConfig(scheduler=config.scheduler, migration=config.migration,
                            max_active=config.max_active,
+                           open_loop=config.open_loop,
                            preemption_margin=config.preemption_margin,
                            preemption_floor=config.preemption_floor,
                            trace=config.trace),
@@ -477,6 +501,7 @@ class RolloutRuntime:
             self.backend, self.trajs,
             OrchestratorConfig(scheduler=cfg.scheduler, migration=cfg.migration,
                                max_active=cfg.max_active,
+                               open_loop=cfg.open_loop,
                                preemption_margin=cfg.preemption_margin,
                                preemption_floor=cfg.preemption_floor,
                                max_events=2_000_000, trace=cfg.trace),
@@ -505,6 +530,14 @@ class RolloutRuntime:
             recoveries=res.recoveries,
             tool_retries=res.tool_retries,
             injected_tool_faults=res.injected_tool_faults,
+            arrivals=res.arrivals,
+            admitted=res.admitted,
+            shed=res.shed,
+            deferred=res.deferred,
+            degraded=res.degraded,
+            peak_live_global=res.peak_live_global,
+            peak_live_worker=res.peak_live_worker,
+            tenant_report=res.tenant_report,
         )
 
     # ------------------------------------------------------------ §6 feedback loop

@@ -113,6 +113,106 @@ def generate(config: WorkloadConfig) -> list[Trajectory]:
     return trajectories
 
 
+# --------------------------------------------------------------------------
+# Arrival processes (open-loop ingress).  A closed-loop batch admits
+# everything at t=0; a serving front door sees an *arrival process*.  Each
+# policy deterministically maps (seed, n) -> n monotone arrival times, which
+# the orchestrator turns into ``arrival`` events on its versioned heap.
+
+# Domain-separation constant for arrival rngs (same idiom as the fault layer:
+# independent random decision streams must never correlate across subsystems).
+_ARRIVAL_STREAM = 4099
+
+
+@dataclass(frozen=True)
+class PoissonArrivals:
+    """Memoryless open-loop traffic: i.i.d. exponential inter-arrival gaps."""
+
+    rate: float                       # mean arrivals per virtual second (QPS)
+    seed: int = 0
+
+    def times(self, n: int) -> list[float]:
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate must be > 0, got {self.rate}")
+        rng = np.random.default_rng((self.seed, _ARRIVAL_STREAM))
+        return np.cumsum(rng.exponential(1.0 / self.rate, size=n)).tolist()
+
+
+@dataclass(frozen=True)
+class BurstyArrivals:
+    """Markov-modulated Poisson: a 2-state chain alternates a calm rate and a
+    burst rate (``burst_factor`` x), producing the clustered arrivals that
+    stress admission control harder than a plain Poisson stream."""
+
+    rate: float                       # *mean* arrivals per virtual second
+    seed: int = 0
+    burst_factor: float = 4.0         # burst-state rate multiplier
+    burst_prob: float = 0.25          # stationary fraction of time in burst state
+    switch_prob: float = 0.1          # per-arrival chance of re-drawing the state
+
+    def times(self, n: int) -> list[float]:
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate must be > 0, got {self.rate}")
+        # rates chosen so the stationary mix averages to `rate`
+        calm = self.rate * (1.0 - self.burst_prob * self.burst_factor
+                            ) / (1.0 - self.burst_prob)
+        calm = max(calm, 0.05 * self.rate)
+        burst = self.rate * self.burst_factor
+        rng = np.random.default_rng((self.seed, _ARRIVAL_STREAM, 1))
+        t, out, bursting = 0.0, [], False
+        for _ in range(n):
+            if rng.random() < self.switch_prob:
+                bursting = rng.random() < self.burst_prob
+            t += rng.exponential(1.0 / (burst if bursting else calm))
+            out.append(t)
+        return out
+
+
+@dataclass(frozen=True)
+class DiurnalArrivals:
+    """Slow sinusoidal load swing (a compressed day): a non-homogeneous
+    Poisson process sampled by Lewis thinning against the peak rate."""
+
+    rate: float                       # mean arrivals per virtual second
+    seed: int = 0
+    amplitude: float = 0.8            # peak swing as a fraction of `rate`
+    period_s: float = 240.0           # one "day" of virtual time
+
+    def times(self, n: int) -> list[float]:
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate must be > 0, got {self.rate}")
+        rng = np.random.default_rng((self.seed, _ARRIVAL_STREAM, 2))
+        rmax = self.rate * (1.0 + self.amplitude)
+        t, out = 0.0, []
+        while len(out) < n:
+            t += rng.exponential(1.0 / rmax)
+            lam = self.rate * (1.0 + self.amplitude
+                               * np.sin(2.0 * np.pi * t / self.period_s))
+            if rng.random() * rmax < lam:
+                out.append(t)
+        return out
+
+
+def make_arrivals(kind: str, rate: float, seed: int = 0, **kwargs):
+    """Factory for the CLI/bench: ``poisson`` | ``bursty`` | ``diurnal``."""
+    policies = {"poisson": PoissonArrivals, "bursty": BurstyArrivals,
+                "diurnal": DiurnalArrivals}
+    if kind not in policies:
+        raise ValueError(f"unknown arrival policy {kind!r} "
+                         f"(choose from {sorted(policies)})")
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    return policies[kind](rate=rate, seed=seed, **kwargs)
+
+
+def assign_arrivals(trajectories: list[Trajectory], policy) -> None:
+    """Stamp ``submit_time`` from an arrival policy, in trajectory order (GRPO
+    groups arrive sample-by-sample: a serving front door sees requests, not
+    groups)."""
+    for t, at in zip(trajectories, policy.times(len(trajectories))):
+        t.submit_time = float(at)
+
+
 def replay_finished(trajectories: list[Trajectory]) -> list[Trajectory]:
     """Materialize plans into finished trajectories (predictor training data harvest)."""
     out = []

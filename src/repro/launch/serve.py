@@ -10,6 +10,10 @@ Local (real execution, reduced model):
     PYTHONPATH=src python -m repro.launch.serve --requests 16 --steps 3 \
         --scheduler pps [--migration on|off] [--tool-latency 1.0]
 
+Open-loop serving (Poisson ingress, tenant SLOs, admission control):
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --arrival poisson \
+        --qps 4 --tenants 'gold:0.25:30,best:0.75:10' [--admission on|off]
+
 Production dry-run (lower + compile serve_step for the pod mesh):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --dry-run \
         [--shape decode_32k] [--multi-pod]
@@ -20,6 +24,48 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+
+def _validate_args(ap, args):
+    """Reject nonsensical flag combinations up front with one-line errors."""
+    for flag, value in (("--requests", args.requests), ("--workers", args.workers),
+                        ("--group-size", args.group_size),
+                        ("--max-active", args.max_active),
+                        ("--quantum", args.quantum),
+                        ("--max-tokens", args.max_tokens),
+                        ("--capacity", args.capacity)):
+        if value < 1:
+            ap.error(f"{flag} must be >= 1 (got {value})")
+    if args.steps < 0:
+        ap.error(f"--steps must be >= 0 (got {args.steps})")
+    if args.tool_latency <= 0:
+        ap.error(f"--tool-latency must be > 0 (got {args.tool_latency})")
+    if args.degrees:
+        try:
+            degrees = [int(d) for d in args.degrees.split(",")]
+        except ValueError:
+            ap.error(f"--degrees must be comma-separated integers "
+                     f"(got {args.degrees!r})")
+        if not degrees or any(d < 1 for d in degrees):
+            ap.error(f"--degrees entries must be >= 1 (got {args.degrees!r})")
+    if args.checkpoint_dir and args.chaos_seed is None:
+        ap.error("--checkpoint-dir is the chaos-recovery store; it needs "
+                 "--chaos-seed (nothing restores without a fault plan)")
+    open_loop = args.arrival != "closed"
+    if open_loop and args.qps <= 0:
+        ap.error(f"--arrival {args.arrival} is open-loop and needs --qps > 0")
+    if not open_loop and args.qps > 0:
+        ap.error("--qps only applies to open-loop ingress; pick an --arrival "
+                 "policy (poisson|bursty|diurnal)")
+    if args.tenants and not open_loop:
+        ap.error("--tenants only applies to open-loop ingress; pick an "
+                 "--arrival policy (poisson|bursty|diurnal)")
+    if args.tenants:
+        from repro.core.tenancy import parse_tenants
+        try:
+            parse_tenants(args.tenants)
+        except ValueError as e:
+            ap.error(f"--tenants: {e}")
 
 
 def build_runtime(args, cfg, params):
@@ -35,12 +81,30 @@ def build_runtime(args, cfg, params):
         seed=args.seed, base_steps=1.5 if max_steps is not None else 3.0,
         max_steps=max_steps, max_total_tokens=args.max_tokens)
     batch = batch[:args.requests]
+    open_loop = args.arrival != "closed"
+    serving = None
+    if open_loop:
+        from repro.core.tenancy import (DEFAULT_TENANTS, ServingConfig,
+                                        assign_tenants, parse_tenants)
+        from repro.engine.workload import assign_arrivals, make_arrivals
+
+        # arrivals first (tenant deadlines are absolute: submit + deadline_s)
+        assign_arrivals(batch, make_arrivals(args.arrival, rate=args.qps,
+                                             seed=args.seed))
+        tenants = parse_tenants(args.tenants) if args.tenants else DEFAULT_TENANTS
+        assign_tenants(batch, tenants, seed=args.seed)
+        per_worker = 4 * args.max_active
+        serving = ServingConfig(admission_control=args.admission == "on",
+                                queue_bound_per_worker=per_worker,
+                                queue_bound_global=per_worker * args.workers,
+                                shed_pressure=2.0, degrade_pressure=3.0)
     rcfg = RuntimeConfig(scheduler=args.scheduler,
                          migration=args.migration == "on",
                          max_active=args.max_active, quantum=args.quantum,
                          tool_latency_scale=args.tool_latency,
                          trace=args.trace > 0, seed=args.seed,
-                         checkpoint_dir=args.checkpoint_dir or None)
+                         checkpoint_dir=args.checkpoint_dir or None,
+                         open_loop=open_loop)
     fleet = None
     if args.degrees:
         fleet = FleetSpec.from_degrees(
@@ -58,7 +122,8 @@ def build_runtime(args, cfg, params):
                                  horizon=horizon)
     return make_runtime(cfg, params, batch, predictor,
                         n_workers=args.workers, config=rcfg,
-                        capacity=args.capacity, fleet=fleet, faults=faults)
+                        capacity=args.capacity, fleet=fleet, faults=faults,
+                        serving=serving)
 
 
 def main(argv=None):
@@ -98,6 +163,23 @@ def main(argv=None):
                          "(event, traj, worker) decision trace — the sequence "
                          "the sim/engine parity harness compares")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival", default="closed",
+                    choices=["closed", "poisson", "bursty", "diurnal"],
+                    help="ingress mode: 'closed' submits the whole batch at "
+                         "t=0 (training-style); the rest generate open-loop "
+                         "arrival times at --qps (serving-style)")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="offered load for open-loop --arrival policies "
+                         "(mean trajectory arrivals per virtual second)")
+    ap.add_argument("--tenants", default="",
+                    help="tenant classes as 'name:share[:deadline_s],...' "
+                         "(e.g. 'gold:0.25:30,silver:0.35:60,best:0.4:15'); "
+                         "tiers follow list order, the last class is sheddable; "
+                         "empty = built-in gold/silver/best_effort mix")
+    ap.add_argument("--admission", default="on", choices=["on", "off"],
+                    help="deadline-aware admission control for open-loop "
+                         "ingress (off = admit everything, queue bounds and "
+                         "the degradation ladder still apply)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="run under a seeded FaultPlan.chaos schedule: one "
                          "mid-run worker death + revival and injected tool "
@@ -111,6 +193,7 @@ def main(argv=None):
                     choices=["prefill_32k", "decode_32k", "long_500k"])
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args(argv)
+    _validate_args(ap, args)
 
     if args.dry_run:
         from repro.launch import dryrun
@@ -122,6 +205,12 @@ def main(argv=None):
     import jax
     from repro.configs import get_config
     from repro.models import model as M
+
+    if args.degrees:
+        degrees = [int(d) for d in args.degrees.split(",")]
+        if max(degrees) > len(jax.devices()):
+            ap.error(f"--degrees asks for an MP-{max(degrees)} worker but only "
+                     f"{len(jax.devices())} device(s) are visible")
 
     cfg = get_config(args.arch).reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -154,6 +243,17 @@ def main(argv=None):
     print(f"preemptions {res.preemptions}, tool-interval migrations "
           f"{res.migrations}, tool invocations {runtime.env.invocations}, "
           f"measured prefix reuse rate {0.0 if rate is None else rate:.2f}")
+    if args.arrival != "closed":
+        print(f"open-loop ingress ({args.arrival} @ {args.qps:g} qps, "
+              f"admission {args.admission}): {res.arrivals} arrivals, "
+              f"{res.admitted} admitted, {res.deferred} deferred, "
+              f"{res.shed} shed, {res.degraded} degraded")
+        for name, st in res.tenant_report.items():
+            print(f"  tenant {name:12s} arrived {st['arrived']:3d}  "
+                  f"attainment {st['attainment']:.2f}  "
+                  f"shed rate {st['shed_rate']:.2f}  "
+                  f"latency p50 {st['latency_p50_s']:.2f}s "
+                  f"p99 {st['latency_p99_s']:.2f}s")
     if args.chaos_seed is not None:
         print(f"chaos (seed {args.chaos_seed}): worker deaths "
               f"{res.worker_deaths}, checkpoint recoveries {res.recoveries}, "

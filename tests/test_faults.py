@@ -50,6 +50,25 @@ def test_retry_policy_backoff_capped():
         RetryPolicy(max_attempts=0)
 
 
+def test_retry_policy_backoff_full_jitter_deterministic():
+    """Seeded full jitter: bit-reproducible per (traj, step, attempt), bounded
+    by the un-jittered ceiling, decorrelated across the seed tuple — and the
+    no-seed path stays the exact ceiling (the pre-jitter contract)."""
+    r = RetryPolicy(max_attempts=5, backoff_base=0.05, backoff_factor=2.0,
+                    backoff_cap=0.15)
+    kw = dict(seed=7, traj_id=3, step=1)
+    waits = [r.backoff(k, **kw) for k in range(4)]
+    assert waits == [r.backoff(k, **kw) for k in range(4)]   # deterministic
+    for k, w in enumerate(waits):
+        assert 0.0 <= w <= r.backoff(k)          # jitter never exceeds ceiling
+    # the draw is domain-separated: any coordinate change moves the wait
+    assert r.backoff(2, **kw) != r.backoff(2, seed=8, traj_id=3, step=1)
+    assert r.backoff(2, **kw) != r.backoff(2, seed=7, traj_id=4, step=1)
+    assert r.backoff(2, **kw) != r.backoff(2, seed=7, traj_id=3, step=2)
+    # capped attempts share a ceiling but still jitter independently
+    assert r.backoff(2, **kw) != r.backoff(9, **kw)
+
+
 def test_fault_plan_rates_must_leave_room_for_success():
     with pytest.raises(ValueError):
         FaultPlan(tool_timeout_rate=0.6, tool_error_rate=0.5)

@@ -1,0 +1,220 @@
+"""Overload robustness: open-loop ingress, tenant SLOs, admission control and
+the degradation ladder — unit properties plus sim-vs-engine decision parity."""
+
+import copy
+import math
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import FaultPlan
+from repro.core.tenancy import (DEFAULT_TENANTS, ServingConfig, TenantClass,
+                                assign_tenants, parse_tenants)
+from repro.engine.runtime import (RuntimeConfig, build_workbench, make_runtime,
+                                  run_on_sim)
+from repro.engine.workload import assign_arrivals, make_arrivals
+from repro.models import model as M
+
+SEED = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm_135m").reduced(n_periods=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------------------------------ arrival policies
+
+def test_arrival_policies_deterministic_and_monotone():
+    for kind in ("poisson", "bursty", "diurnal"):
+        a = make_arrivals(kind, rate=4.0, seed=3).times(32)
+        b = make_arrivals(kind, rate=4.0, seed=3).times(32)
+        assert a == b, kind                          # seeded => reproducible
+        assert len(a) == 32
+        assert all(t >= 0.0 for t in a), kind
+        assert all(y >= x for x, y in zip(a, a[1:])), kind   # non-decreasing
+        c = make_arrivals(kind, rate=4.0, seed=4).times(32)
+        assert a != c, kind                          # the seed matters
+
+
+def test_arrival_rate_scales_horizon():
+    slow = make_arrivals("poisson", rate=1.0, seed=0).times(64)
+    fast = make_arrivals("poisson", rate=8.0, seed=0).times(64)
+    assert slow[-1] > fast[-1] * 3                  # ~8x compression
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        make_arrivals("poisson", rate=0.0)
+    with pytest.raises(ValueError):
+        make_arrivals("uniform", rate=1.0)
+
+
+def test_assign_arrivals_stamps_submit_times():
+    batch, _ = build_workbench(n_prompts=2, group_size=2, seed=SEED)
+    assign_arrivals(batch, make_arrivals("poisson", rate=5.0, seed=SEED))
+    times = [t.submit_time for t in batch]
+    assert times == sorted(times) and times[-1] > 0.0
+
+
+# ------------------------------------------------------------ tenant classes
+
+def test_parse_tenants_spec():
+    classes = parse_tenants("gold:0.25:30,silver:0.35:60,best:0.4")
+    assert [c.name for c in classes] == ["gold", "silver", "best"]
+    assert [c.tier for c in classes] == [0, 1, 2]
+    assert classes[0].deadline_s == 30.0 and classes[2].deadline_s == math.inf
+    assert abs(sum(c.share for c in classes) - 1.0) < 1e-12
+    assert [c.sheddable for c in classes] == [False, False, True]
+    # gold outranks everyone in the PPS blend
+    assert classes[0].weight > classes[1].weight > classes[2].weight
+    for bad in ("", "gold", "gold:0", "gold:0.5:-2", "gold:x:3"):
+        with pytest.raises(ValueError):
+            parse_tenants(bad)
+
+
+def test_assign_tenants_deterministic_per_traj_id():
+    batch, _ = build_workbench(n_prompts=4, group_size=4, seed=SEED)
+    assign_arrivals(batch, make_arrivals("poisson", rate=5.0, seed=SEED))
+    twin = copy.deepcopy(batch)
+    assign_tenants(batch, DEFAULT_TENANTS, seed=7)
+    assign_tenants(twin[4:], DEFAULT_TENANTS, seed=7)   # sliced batch, same ids
+    for a, b in zip(batch[4:], twin[4:]):
+        assert (a.tenant, a.tenant_tier, a.sheddable) == \
+            (b.tenant, b.tenant_tier, b.sheddable)
+    assert len({t.tenant for t in batch}) > 1           # the mix is a mix
+    # deadlines are absolute: arrival + class deadline
+    cls = {c.name: c for c in DEFAULT_TENANTS}
+    for t in batch:
+        d = cls[t.tenant].deadline_s
+        expect = t.submit_time + d if math.isfinite(d) else math.inf
+        assert t.slo_deadline == expect
+
+
+# ------------------------------------------------------- open-loop properties
+
+TENANTS = (
+    TenantClass("gold", tier=0, deadline_s=30.0, weight=2.0,
+                sheddable=False, share=0.3),
+    TenantClass("best", tier=1, deadline_s=1.0, weight=0.5,
+                sheddable=True, share=0.7),
+)
+
+
+def _open_loop_sim(rate=80.0, serving=None, faults=None, n_prompts=8,
+                   workbench=None):
+    batch, predictor = workbench if workbench is not None else \
+        build_workbench(n_prompts=n_prompts, group_size=4, seed=SEED)
+    batch = copy.deepcopy(batch)
+    assign_arrivals(batch, make_arrivals("poisson", rate=rate, seed=SEED))
+    assign_tenants(batch, TENANTS, seed=SEED)
+    rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=2,
+                         quantum=8, link_bandwidth=math.inf, trace=True,
+                         seed=SEED, open_loop=True)
+    res = run_on_sim(batch, predictor, n_workers=2, config=rcfg,
+                     serving=serving, faults=faults)
+    return res, batch
+
+
+OVERLOAD = ServingConfig(admission_control=True, queue_bound_per_worker=3,
+                         queue_bound_global=5, shed_pressure=1.2,
+                         degrade_pressure=1.6, defer_seconds=0.5)
+
+
+def test_queue_bounds_never_exceeded():
+    res, _ = _open_loop_sim(serving=OVERLOAD)
+    assert res.shed > 0                              # the bound actually bit
+    assert res.peak_live_worker <= OVERLOAD.queue_bound_per_worker
+    assert res.peak_live_global <= OVERLOAD.queue_bound_global
+
+
+def test_gold_tier_never_shed():
+    res, batch = _open_loop_sim(serving=OVERLOAD)
+    assert res.shed > 0
+    assert not any(t.shed for t in batch if t.tenant == "gold")
+    assert all(t.finished for t in batch if t.tenant == "gold")
+    # everything drains: FINISHED or SHED, nothing stuck
+    assert all(t.finished or t.shed for t in batch)
+
+
+def test_shed_decisions_deterministic():
+    wb = build_workbench(n_prompts=8, group_size=4, seed=SEED)
+    a, batch_a = _open_loop_sim(serving=OVERLOAD, workbench=wb)
+    b, batch_b = _open_loop_sim(serving=OVERLOAD, workbench=wb)
+    assert a.trace == b.trace
+    assert a.makespan == b.makespan
+    assert [(t.traj_id, t.shed, t.shed_reason) for t in batch_a] == \
+        [(t.traj_id, t.shed, t.shed_reason) for t in batch_b]
+
+
+def test_serving_defaults_do_not_shed():
+    """ServingConfig() = gate off, unbounded queues: open loop still admits
+    everything (the closed-loop contract, spread over arrival times)."""
+    res, batch = _open_loop_sim(serving=None)
+    assert res.shed == res.deferred == res.degraded == 0
+    assert res.admitted == res.arrivals == len(batch)
+    assert all(t.finished for t in batch)
+
+
+def test_degradation_ladder_tightens_step_budgets():
+    serving = ServingConfig(queue_bound_per_worker=8, queue_bound_global=14,
+                            shed_pressure=2.5, degrade_pressure=1.2)
+    res, batch = _open_loop_sim(rate=50.0, serving=serving)
+    assert res.degraded > 0
+    assert not any(t.degraded for t in batch if t.tenant == "gold")
+    assert all(t.finished or t.shed for t in batch)
+
+
+# ------------------------------------------- sim/engine decision-trace parity
+
+def _parity_pair(cfg, params, serving, rate=60.0, faults_seed=None):
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    assign_arrivals(batch, make_arrivals("bursty", rate=rate, seed=SEED))
+    assign_tenants(batch, TENANTS, seed=SEED)
+    twin = copy.deepcopy(batch)
+    rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=2,
+                         quantum=8, link_bandwidth=math.inf, trace=True,
+                         seed=SEED, open_loop=True)
+    faults = twin_faults = None
+    if faults_seed is not None:
+        faults = FaultPlan.chaos(seed=faults_seed, n_workers=2, horizon=60.0)
+        twin_faults = copy.deepcopy(faults)
+    eng = make_runtime(cfg, params, batch, predictor, n_workers=2, config=rcfg,
+                       serving=serving, faults=faults).run()
+    sim = run_on_sim(twin, predictor, n_workers=2, config=rcfg,
+                     serving=serving, faults=twin_faults)
+    return eng, sim
+
+
+def test_open_loop_decision_trace_parity(setup):
+    """Arrival/admit/shed events are policy decisions: under overload the
+    SimBackend and EngineBackend must produce the IDENTICAL (event, traj,
+    worker) sequence, including who got shed, and bit-identical makespans."""
+    cfg, params = setup
+    serving = ServingConfig(admission_control=True, queue_bound_per_worker=5,
+                            queue_bound_global=9, shed_pressure=1.5,
+                            degrade_pressure=2.0)
+    eng, sim = _parity_pair(cfg, params, serving)
+    assert eng.shed > 0                              # the test must bite
+    kinds = {k for k, _, _ in eng.trace}
+    assert {"arrival", "admit", "shed"} <= kinds
+    assert eng.trace == sim.trace
+    assert eng.makespan == sim.makespan
+    assert (eng.arrivals, eng.admitted, eng.shed, eng.deferred) == \
+        (sim.arrivals, sim.admitted, sim.shed, sim.deferred)
+
+
+def test_open_loop_parity_under_chaos(setup):
+    """Open-loop ingress + admission control + a seeded worker death: the
+    decision trace stays bit-identical across backends."""
+    cfg, params = setup
+    serving = ServingConfig(admission_control=True, queue_bound_per_worker=6,
+                            queue_bound_global=10, shed_pressure=2.0,
+                            degrade_pressure=3.0)
+    eng, sim = _parity_pair(cfg, params, serving, rate=30.0, faults_seed=SEED)
+    assert eng.worker_deaths == sim.worker_deaths == 1
+    assert eng.trace == sim.trace
+    assert eng.makespan == sim.makespan
