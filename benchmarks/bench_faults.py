@@ -28,7 +28,7 @@ import argparse
 import copy
 import sys
 
-from benchmarks.common import emit, write_json_atomic
+from benchmarks.common import emit, sanitizer_summary, write_json_atomic
 
 SEED = 5
 
@@ -41,20 +41,22 @@ RATE_SWEEP = [(0.0, 0.0), (0.05, 0.025), (0.10, 0.05), (0.20, 0.10),
               (0.40, 0.20)]
 
 
-def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int):
+def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int,
+                    sanitize: bool = False):
     from repro.engine.runtime import RuntimeConfig
     return RuntimeConfig(scheduler=scheduler, migration=migration,
-                         max_active=max_active, quantum=8, seed=seed)
+                         max_active=max_active, quantum=8, seed=seed,
+                         sanitize=sanitize)
 
 
 def run_case(cfg, params, scheduler: str, migration: bool, shape, seed: int,
-             backend: str = "engine", faults=None) -> dict:
+             backend: str = "engine", faults=None, sanitize: bool = False) -> dict:
     """One (policy, backend, fault-plan) rollout; returns flat metrics."""
     from repro.engine.runtime import build_workbench, make_runtime, run_on_sim
     n_prompts, group, max_active = shape
     batch, predictor = build_workbench(n_prompts=n_prompts, group_size=group,
                                        seed=seed)
-    rcfg = _runtime_config(scheduler, migration, max_active, seed)
+    rcfg = _runtime_config(scheduler, migration, max_active, seed, sanitize)
     if backend == "sim":
         res = run_on_sim(batch, predictor, n_workers=2, config=rcfg,
                          faults=faults)
@@ -75,6 +77,7 @@ def run_case(cfg, params, scheduler: str, migration: bool, shape, seed: int,
         "injected_tool_faults": res.injected_tool_faults,
         "finished": sum(t.finished for t in res.trajectories),
         "trajectories": len(res.trajectories),
+        "sanitizer": res.sanitizer,
     }
 
 
@@ -97,13 +100,17 @@ def run(smoke: bool = False, seed: int = SEED,
     # The no-fault PPS run doubles as the horizon estimate the death is
     # scheduled against (kill at 40% of the clean makespan).
     per_backend: dict[str, dict] = {}
+    # smoke validates the decision stream as it runs (TraceSanitizer) —
+    # chaos runs are exactly where causality bugs (stale events, dispatch to
+    # the dead, unbalanced transfers) would surface
     for backend in ("engine", "sim"):
-        clean = run_case(cfg, params, "pps", True, shape, seed, backend)
+        clean = run_case(cfg, params, "pps", True, shape, seed, backend,
+                         sanitize=smoke)
         faults = chaos_plan(seed, clean["makespan_s"])
         chaos = run_case(cfg, params, "pps", True, shape, seed, backend,
-                         faults=copy.deepcopy(faults))
+                         faults=copy.deepcopy(faults), sanitize=smoke)
         fcfs_chaos = run_case(cfg, params, "fcfs", False, shape, seed, backend,
-                              faults=copy.deepcopy(faults))
+                              faults=copy.deepcopy(faults), sanitize=smoke)
         per_backend[backend] = {
             "no_fault_pps": clean,
             "chaos_pps_migration": chaos,
@@ -126,6 +133,11 @@ def run(smoke: bool = False, seed: int = SEED,
         },
         "backends": per_backend,
     }
+    if smoke:
+        results["sanitizer"] = sanitizer_summary(
+            [r[k]["sanitizer"] for r in per_backend.values()
+             for k in ("no_fault_pps", "chaos_pps_migration",
+                       "chaos_fcfs_baseline")])
 
     if not smoke:
         # ---- goodput vs injected tool-fault rate (analytic backend: the
@@ -180,6 +192,9 @@ def run(smoke: bool = False, seed: int = SEED,
             fcfs = r["chaos_fcfs_baseline"]
             assert fcfs["finished"] == fcfs["trajectories"], \
                 f"{backend}: FCFS chaos left live trajectories"
+        san = results["sanitizer"]
+        assert san["runs"] == 6 and san["violations"] == 0, \
+            f"trace sanitizer reported violations under chaos: {san}"
     return results
 
 

@@ -25,7 +25,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, timed, write_json_atomic
+from benchmarks.common import emit, sanitizer_summary, timed, write_json_atomic
 from repro.configs import get_config
 from repro.engine import worker as W
 from repro.engine.sampler import SamplerConfig
@@ -117,6 +117,20 @@ def run(fast: bool = True, smoke: bool = False,
         "reused_tokens": wg.reused_tokens,
     }
 
+    if smoke:
+        # this bench drives workers directly (no orchestrator of its own), so
+        # give CI a small sanitized control-plane pass too: every smoke lane
+        # in the suite exercises the TraceSanitizer
+        from repro.engine.runtime import (RuntimeConfig, build_workbench,
+                                          run_on_sim)
+        batch, predictor = build_workbench(n_prompts=3, group_size=group,
+                                           seed=0)
+        res = run_on_sim(batch, predictor, n_workers=2,
+                         config=RuntimeConfig(scheduler="pps", migration=True,
+                                              max_active=2, quantum=8, seed=0,
+                                              sanitize=True))
+        results["sanitizer"] = sanitizer_summary([res.sanitizer])
+
     write_json_atomic(json_path, results)
 
     emit([
@@ -149,6 +163,9 @@ def run(fast: bool = True, smoke: bool = False,
             "legacy baseline unexpectedly stopped compiling per length"
         assert results["grpo_group"]["reused_tokens"] >= \
             (group - 1) * len(prompt), "GRPO siblings did not implant the prompt"
+        san = results["sanitizer"]
+        assert san["runs"] == 1 and san["violations"] == 0, \
+            f"trace sanitizer reported violations: {san}"
     return results
 
 

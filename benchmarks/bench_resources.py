@@ -34,7 +34,8 @@ import sys
 
 import jax
 
-from benchmarks.common import Workbench, emit, write_json_atomic
+from benchmarks.common import (Workbench, emit, sanitizer_summary,
+                               write_json_atomic)
 from repro.configs import get_config
 from repro.engine.fleet import FleetSpec
 from repro.engine.runtime import RuntimeConfig, build_workbench, make_runtime
@@ -55,7 +56,8 @@ FULL_SHAPE = ("search", 6, 4, 2)
 SMOKE_SHAPE = ("coding", 3, 4, 2)
 
 
-def run_fleet(cfg, params, fleet: FleetSpec, shape, seed: int) -> dict:
+def run_fleet(cfg, params, fleet: FleetSpec, shape, seed: int,
+              sanitize: bool = False) -> dict:
     task, n_prompts, group, max_active = shape
     batch, predictor = build_workbench(task=task, n_prompts=n_prompts,
                                        group_size=group, seed=seed)
@@ -65,7 +67,7 @@ def run_fleet(cfg, params, fleet: FleetSpec, shape, seed: int) -> dict:
     # a heterogeneous fleet a 1-equivalent imbalance is within rounding of a
     # single resident — both fleets run the same (fair) gate.
     rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=max_active,
-                         quantum=8, seed=seed)
+                         quantum=8, seed=seed, sanitize=sanitize)
     runtime = make_runtime(cfg, params, batch, predictor, config=rcfg,
                            fleet=fleet, migration_load_gap=2)
     res = runtime.run()
@@ -83,6 +85,7 @@ def run_fleet(cfg, params, fleet: FleetSpec, shape, seed: int) -> dict:
         "meshed_workers": sum(1 for w in runtime.fleet.workers
                               if w.mesh is not None),
         "wall_s": res.wall_time,
+        "sanitizer": res.sanitizer,
     }
 
 
@@ -125,8 +128,10 @@ def run(fast: bool | None = None, smoke: bool = False, full: bool = False,
     cfg = get_config("qwen3_1_7b").reduced(n_periods=1)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-    het = run_fleet(cfg, params, HET, shape, seed)
-    hom = run_fleet(cfg, params, HOM, shape, seed)
+    # smoke validates the decision stream (TraceSanitizer) on both fleets;
+    # full runs keep headline timings free of instrumentation
+    het = run_fleet(cfg, params, HET, shape, seed, sanitize=smoke)
+    hom = run_fleet(cfg, params, HOM, shape, seed, sanitize=smoke)
     speedup = hom["makespan_s"] / het["makespan_s"]
 
     # §6 calibration: fit t1/overlap from the het run's measured decode timing,
@@ -154,6 +159,9 @@ def run(fast: bool | None = None, smoke: bool = False, full: bool = False,
         },
         "reprovision": report,
     }
+    if smoke:
+        results["sanitizer"] = sanitizer_summary([het["sanitizer"],
+                                                  hom["sanitizer"]])
     if full:
         results["control_plane_rows"] = [list(r) for r in run_control_plane(False)]
     write_json_atomic(json_path, results)
@@ -186,6 +194,9 @@ def run(fast: bool | None = None, smoke: bool = False, full: bool = False,
         if jax.device_count() >= HET.budget:
             assert het["meshed_workers"] == HET.n_workers, \
                 "every worker should own its carved sub-mesh on an 8-device host"
+        san = results["sanitizer"]
+        assert san["runs"] == 2 and san["violations"] == 0, \
+            f"trace sanitizer reported violations on the fleet runs: {san}"
     return results
 
 

@@ -36,7 +36,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks.common import emit, write_json_atomic
+from benchmarks.common import emit, sanitizer_summary, write_json_atomic
 
 SEED = 5                       # seeded long-tail workload the comparison is on
 
@@ -50,19 +50,21 @@ POLICIES = [("pps", True), ("pps", False), ("sjf", False),
             ("fcfs", False), ("rr", False)]
 
 
-def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int):
+def _runtime_config(scheduler: str, migration: bool, max_active: int, seed: int,
+                    sanitize: bool = False):
     from repro.engine.runtime import RuntimeConfig
     return RuntimeConfig(scheduler=scheduler, migration=migration,
-                         max_active=max_active, quantum=8, seed=seed)
+                         max_active=max_active, quantum=8, seed=seed,
+                         sanitize=sanitize)
 
 
 def run_policy(cfg, params, scheduler: str, migration: bool, shape, seed: int,
-               backend: str = "engine") -> dict:
+               backend: str = "engine", sanitize: bool = False) -> dict:
     from repro.engine.runtime import build_workbench, make_runtime, run_on_sim
     n_prompts, group, max_active = shape
     batch, predictor = build_workbench(n_prompts=n_prompts, group_size=group,
                                        seed=seed)
-    rcfg = _runtime_config(scheduler, migration, max_active, seed)
+    rcfg = _runtime_config(scheduler, migration, max_active, seed, sanitize)
     if backend == "sim":
         res = run_on_sim(batch, predictor, n_workers=2, config=rcfg)
         reuse, tokens, wall = None, sum(t.tokens_generated for t in batch), 0.0
@@ -86,6 +88,7 @@ def run_policy(cfg, params, scheduler: str, migration: bool, shape, seed: int,
         "measured_reuse_rate": reuse,
         "wall_s": wall,
         "events": res.events,
+        "sanitizer": res.sanitizer,
     }
 
 
@@ -116,8 +119,12 @@ def run(smoke: bool = False, seed: int = SEED, backend: str = "engine",
     cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-    pps = run_policy(cfg, params, "pps", True, shape, seed, backend)
-    fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, backend)
+    # smoke validates the decision stream as it runs (TraceSanitizer); full
+    # runs keep the headline timings free of instrumentation
+    pps = run_policy(cfg, params, "pps", True, shape, seed, backend,
+                     sanitize=smoke)
+    fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, backend,
+                      sanitize=smoke)
     speedup = fcfs["makespan_s"] / pps["makespan_s"]
     results = {
         "workload": {
@@ -137,10 +144,14 @@ def run(smoke: bool = False, seed: int = SEED, backend: str = "engine",
         # cheap twin check: the analytic backend must rank the two policies
         # the way the measured backend does (the full run sweeps all policies)
         twin = "sim" if backend == "engine" else "engine"
-        t_pps = run_policy(cfg, params, "pps", True, shape, seed, twin)
-        t_fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, twin)
+        t_pps = run_policy(cfg, params, "pps", True, shape, seed, twin,
+                           sanitize=True)
+        t_fcfs = run_policy(cfg, params, "fcfs", False, shape, seed, twin,
+                            sanitize=True)
         results["twin_agrees"] = ((t_pps["makespan_s"] < t_fcfs["makespan_s"])
                                   == (pps["makespan_s"] < fcfs["makespan_s"]))
+        results["sanitizer"] = sanitizer_summary(
+            [r["sanitizer"] for r in (pps, fcfs, t_pps, t_fcfs)])
     else:
         # sim-vs-engine makespan rank correlation across scheduler policies:
         # the property that makes model-free policy sweeps on the twin sound.
@@ -193,6 +204,9 @@ def run(smoke: bool = False, seed: int = SEED, backend: str = "engine",
             (f"PPS+migration regressed vs FCFS: "
              f"{pps['makespan_s']:.3f} vs {fcfs['makespan_s']:.3f}")
         assert results["twin_agrees"], "analytic twin ranks pps/fcfs differently"
+        san = results["sanitizer"]
+        assert san["runs"] == 4 and san["violations"] == 0, \
+            f"trace sanitizer reported violations: {san}"
     return results
 
 

@@ -32,7 +32,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import emit, write_json_atomic
+from benchmarks.common import emit, sanitizer_summary, write_json_atomic
 
 SEED = 5
 
@@ -122,7 +122,7 @@ def _calibrate_deadlines(cfg, params, shape, seed: int, qps: float,
 
 
 def run_point(cfg, params, shape, seed: int, qps: float, tenants, serving,
-              backend: str) -> dict:
+              backend: str, sanitize: bool = False) -> dict:
     """One (offered load, admission policy, backend) open-loop run."""
     from repro.core.tenancy import assign_tenants
     from repro.engine.runtime import (RuntimeConfig, build_workbench,
@@ -134,7 +134,8 @@ def run_point(cfg, params, shape, seed: int, qps: float, tenants, serving,
     assign_arrivals(batch, make_arrivals("poisson", rate=qps, seed=seed))
     assign_tenants(batch, tenants, seed=seed)
     rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=max_active,
-                         quantum=8, seed=seed, open_loop=True)
+                         quantum=8, seed=seed, open_loop=True,
+                         sanitize=sanitize)
     if backend == "sim":
         res = run_on_sim(batch, predictor, n_workers=2, config=rcfg,
                          serving=serving)
@@ -161,6 +162,7 @@ def run_point(cfg, params, shape, seed: int, qps: float, tenants, serving,
         "peak_live_global": res.peak_live_global,
         "peak_live_worker": res.peak_live_worker,
         "tenants": res.tenant_report,
+        "sanitizer": res.sanitizer,
     }
 
 
@@ -189,9 +191,11 @@ def run(smoke: bool = False, seed: int = SEED,
             for label, admission in (("admission_on", True),
                                      ("admission_off", False)):
                 serving = _serving_config(admission, shape[2])
+                # smoke validates the decision stream (TraceSanitizer) on every
+                # point of the sweep; full runs stay uninstrumented
                 point[label] = run_point(cfg, params, shape, seed, qps,
                                          copy.deepcopy(tenants), serving,
-                                         backend)
+                                         backend, sanitize=smoke)
             curve.append(point)
         knee = 0.0
         for point in curve:
@@ -217,6 +221,11 @@ def run(smoke: bool = False, seed: int = SEED,
         "calibration": calib,
         "backends": per_backend,
     }
+    if smoke:
+        results["sanitizer"] = sanitizer_summary(
+            [point[label]["sanitizer"]
+             for r in per_backend.values() for point in r["curve"]
+             for label in ("admission_on", "admission_off")])
     write_json_atomic(json_path, results)
 
     eng = per_backend["engine"]
@@ -263,6 +272,10 @@ def run(smoke: bool = False, seed: int = SEED,
                     assert run_["drained"], (
                         f"{backend}/{label}@{point['load_multiplier']}x: "
                         f"arrivals left neither FINISHED nor SHED")
+        san = results["sanitizer"]
+        expect = 2 * len(loads) * 2     # backends x loads x admission on/off
+        assert san["runs"] == expect and san["violations"] == 0, \
+            f"trace sanitizer reported violations under overload: {san}"
     return results
 
 

@@ -89,3 +89,22 @@ def timed(fn, *args, repeat: int = 3, **kw):
         out = fn(*args, **kw)
         best = min(best, time.perf_counter() - t0)
     return out, best
+
+
+def sanitizer_summary(reports: list) -> dict:
+    """Aggregate TraceSanitizer reports (``res.sanitizer``) for a bench JSON.
+
+    Smoke benches run with ``RuntimeConfig(sanitize=True)`` and publish the
+    combined event count, violation count (asserted zero) and the sanitizer's
+    own wall cost, so the overhead of validating the decision stream is a
+    recorded quantity rather than folklore.  Empty reports ({} = sanitizer
+    off) are skipped.
+    """
+    reps = [r for r in reports if r]
+    return {
+        "runs": len(reps),
+        "events": sum(r["events"] for r in reps),
+        "violations": sum(r["violations"] for r in reps),
+        "stale_worker_events": sum(r["stale_worker_events"] for r in reps),
+        "wall_s": sum(r["wall_s"] for r in reps),
+    }

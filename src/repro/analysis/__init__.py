@@ -1,0 +1,50 @@
+"""Static analysis + runtime sanitization for Heddle's control plane.
+
+The control-plane guarantees the rest of the repo leans on — deterministic
+decision traces (the sim/engine parity harness), jit-cache discipline (mesh as
+a static argument, fixed-shape kernels), and the versioned event heap — were
+enforced by convention until this package.  Three tools turn them into
+machine-checked rules:
+
+* :mod:`repro.analysis.lint` — an AST linter (``python -m repro.analysis.lint
+  src/repro``) with codebase-specific rules HDL001–HDL004 (wall-clock/unseeded
+  RNG, unordered-set iteration in decision paths, jit hygiene + host syncs in
+  decode loops, event-heap discipline).  See docs/analysis.md for the catalog
+  and the ``# heddle: noqa HDLxxx`` suppression syntax.
+* :mod:`repro.analysis.protocol` — an ``ExecutionBackend`` conformance checker
+  that statically diffs SimBackend/EngineBackend (and any future backend)
+  against the protocol so the implementations cannot silently drift.
+* :mod:`repro.analysis.sanitize` — ``TraceSanitizer``, a runtime validator the
+  orchestrator drives over every emitted decision event (monotone virtual
+  time, liveness, slot conservation, migration balance, tenancy legality).
+"""
+
+# lazy attribute access: `python -m repro.analysis.lint` must not pre-import
+# the submodule through the package (runpy double-import), and the
+# orchestrator's sanitize hook must not pay for the linter's ast machinery
+_EXPORTS = {
+    "Violation": "repro.analysis.lint",
+    "lint_paths": "repro.analysis.lint",
+    "lint_source": "repro.analysis.lint",
+    "check_backend": "repro.analysis.protocol",
+    "TraceSanitizer": "repro.analysis.sanitize",
+    "TraceViolationError": "repro.analysis.sanitize",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+__all__ = [
+    "Violation",
+    "lint_paths",
+    "lint_source",
+    "check_backend",
+    "TraceSanitizer",
+    "TraceViolationError",
+]

@@ -1,0 +1,27 @@
+"""Rule registry for the heddle linter.
+
+Each rule is a callable ``check(ctx) -> Iterator[Violation]`` over a parsed
+module (:class:`repro.analysis.lint.FileContext`).  Rules are registered by
+id in :data:`ALL_RULES`; :mod:`repro.analysis.lint` applies every rule whose
+scope matches the file being linted and filters ``# heddle: noqa`` lines.
+
+To add a rule: implement it in a module here, give it a unique ``HDLxxx`` id,
+add it to :data:`ALL_RULES`, document it in docs/analysis.md, and add
+positive/negative fixtures under tests/fixtures/lint/.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules.determinism import RuleHDL001, RuleHDL002
+from repro.analysis.rules.events import RuleHDL004
+from repro.analysis.rules.jit_hygiene import RuleHDL003
+
+#: all registered rules, keyed by id, in catalog order
+ALL_RULES = {
+    "HDL001": RuleHDL001(),
+    "HDL002": RuleHDL002(),
+    "HDL003": RuleHDL003(),
+    "HDL004": RuleHDL004(),
+}
+
+__all__ = ["ALL_RULES", "RuleHDL001", "RuleHDL002", "RuleHDL003", "RuleHDL004"]

@@ -1,0 +1,148 @@
+"""HDL003 — jit-cache hygiene and host-sync discipline.
+
+Two failure modes this rule pins down:
+
+1. **Retrace leaks.** ``jax.jit``/``pjit`` caches compiled executables keyed
+   on the *static* arguments and the avals of the traced ones.  Passing the
+   mesh or a config object as a traced argument either fails outright
+   (unhashable pytree leaves) or — worse — silently retraces per call when
+   the object is hashable but fresh each time.  Every jit site whose wrapped
+   function takes a ``mesh``/``cfg``/``config`` parameter must name it in
+   ``static_argnames``/``static_argnums``.
+
+2. **Decode-loop host syncs.** A ``.item()``/``np.asarray``/``device_get``
+   inside the per-token/per-chunk loop of a decode or prefill path serializes
+   the host against the accelerator once per iteration — the classic
+   dispatch-pipeline stall.  Device values must stay on device until the loop
+   exits (or the sync must be justified with a noqa, e.g. a deliberate
+   early-exit check).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from repro.analysis.rules.base import FileContext, Scope, Violation, dotted_name
+
+#: parameters that must be static at any jit site that accepts them
+_STATIC_REQUIRED = {"mesh", "cfg", "config"}
+
+#: function names whose loop bodies are token/chunk hot paths
+_HOT_FN = re.compile(r"(^|_)(decode|prefill|extend)", re.I)
+
+#: host-synchronizing callables (by resolved dotted path or attribute name)
+_SYNC_PATHS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+_SYNC_ATTRS = {"item", "block_until_ready", "tolist"}
+
+
+def _jit_static(dec: ast.AST, imports) -> Optional[tuple[set[str], set[int]]]:
+    """If ``dec`` is a jit/pjit decoration, return its (static names, nums)."""
+    # bare @jax.jit / @pjit
+    target = imports.resolve(dec)
+    if target in ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"):
+        return set(), set()
+    if not isinstance(dec, ast.Call):
+        return None
+    # @jax.jit(...) / @partial(jax.jit, ...) / @functools.partial(jax.jit, ...)
+    fn = imports.resolve(dec.func)
+    if fn in ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"):
+        call = dec
+    elif fn in ("functools.partial", "partial") and dec.args and \
+            imports.resolve(dec.args[0]) in ("jax.jit", "jax.pjit",
+                                             "jax.experimental.pjit.pjit"):
+        call = dec
+    else:
+        return None
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.add(el.value)
+        elif kw.arg == "static_argnums":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    nums.add(el.value)
+    return names, nums
+
+
+class RuleHDL003:
+    """jit sites must pin mesh/config static; decode loops must not host-sync."""
+
+    rule_id = "HDL003"
+    scope = Scope.NONE  # anywhere jax shows up
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        yield from self._check_jit_sites(ctx)
+        yield from self._check_hot_loops(ctx)
+
+    # -------------------------------------------------- retrace leaks
+    def _check_jit_sites(self, ctx: FileContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    static = _jit_static(dec, ctx.imports)
+                    if static is not None:
+                        yield from self._audit(node, static, ctx, dec.lineno,
+                                               dec.col_offset)
+            elif isinstance(node, ast.Call):
+                # inline jit(fn, ...) where fn is a lambda or a local def we
+                # can see the parameters of
+                target = ctx.imports.resolve(node.func)
+                if target not in ("jax.jit", "jax.pjit",
+                                  "jax.experimental.pjit.pjit"):
+                    continue
+                static = _jit_static(node, ctx.imports) or (set(), set())
+                if node.args and isinstance(node.args[0], ast.Lambda):
+                    yield from self._audit(node.args[0], static, ctx,
+                                           node.lineno, node.col_offset)
+
+    def _audit(self, fn, static: tuple[set[str], set[int]], ctx: FileContext,
+               line: int, col: int) -> Iterator[Violation]:
+        names, nums = static
+        params = [a.arg for a in fn.args.args]
+        for idx, p in enumerate(params):
+            if p in _STATIC_REQUIRED and p not in names and idx not in nums:
+                yield Violation(
+                    self.rule_id, ctx.path, line, col,
+                    f"jit site traces parameter `{p}`: meshes/configs must be "
+                    f"listed in static_argnames/static_argnums or the cache "
+                    f"retraces (or fails) per call")
+
+    # -------------------------------------------------- decode-loop syncs
+    def _check_hot_loops(self, ctx: FileContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _HOT_FN.search(node.name):
+                continue
+            for loop in ast.walk(node):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for call in ast.walk(loop):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    msg = self._sync_call(call, ctx)
+                    if msg is not None:
+                        yield Violation(self.rule_id, ctx.path, call.lineno,
+                                        call.col_offset,
+                                        f"{msg} inside the `{node.name}` "
+                                        f"loop forces a device→host sync per "
+                                        f"iteration; hoist it out of the "
+                                        f"loop or justify with a noqa")
+
+    @staticmethod
+    def _sync_call(call: ast.Call, ctx: FileContext) -> Optional[str]:
+        target = ctx.imports.resolve(call.func)
+        if target in _SYNC_PATHS:
+            return f"`{dotted_name(call.func)}(...)`"
+        if isinstance(call.func, ast.Attribute) and \
+                call.func.attr in _SYNC_ATTRS and not call.args:
+            return f"`.{call.func.attr}()`"
+        return None
+
+
+__all__ = ["RuleHDL003"]

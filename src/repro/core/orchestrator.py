@@ -169,6 +169,7 @@ class OrchestratorConfig:
     max_events: int = 2_000_000  # runaway-loop guard
     timeline_every: int = 0  # sample (t, live) every N events (0 = off)
     trace: bool = False  # record the (event, traj, worker) decision trace
+    sanitize: bool = False  # validate the decision stream (TraceSanitizer)
 
 
 @dataclass
@@ -196,6 +197,7 @@ class OrchestratorResult:
     peak_live_global: int = 0  # high-water mark of concurrently live trajs
     peak_live_worker: int = 0  # high-water mark on any single worker
     tenant_report: dict = field(default_factory=dict)
+    sanitizer: dict = field(default_factory=dict)  # TraceSanitizer report ({} = off)
 
 
 class _WorkerLane:
@@ -272,6 +274,14 @@ class Orchestrator:
         self.timeline: list[tuple[float, int]] = []
         self._evq: list[tuple[float, int, str, object]] = []
         self._seq = itertools.count()
+        self._sanitizer = None
+        if config.sanitize:
+            # lazy: core must not import analysis (which imports core) eagerly
+            from repro.analysis.sanitize import TraceSanitizer
+
+            self._sanitizer = TraceSanitizer(
+                self.trajs, backend.n_workers, config.max_active
+            )
 
     # ------------------------------------------------------------ event plumbing
     def _push(self, t: float, kind: str, payload) -> None:
@@ -280,6 +290,8 @@ class Orchestrator:
     def _note(self, kind: str, tid: int, wid: int) -> None:
         if self.cfg.trace:
             self.trace.append((kind, tid, wid))
+        if self._sanitizer is not None:
+            self._sanitizer.observe(kind, tid, wid)
 
     def _loads(self) -> np.ndarray:
         return np.asarray(
@@ -362,7 +374,9 @@ class Orchestrator:
             self._start(lane, traj, now)
         if lane.scheduler.preemptive and len(lane.scheduler):
             for _ in range(len(lane.active)):
-                active = [self.by_id[t] for t in lane.active]
+                # canonical candidate order: preempt_victim breaks priority
+                # ties by position, so set order would leak into the trace
+                active = [self.by_id[t] for t in sorted(lane.active)]
                 victim = lane.scheduler.preempt_victim(active)
                 if victim is None:
                     break
@@ -717,9 +731,15 @@ class Orchestrator:
             if self.events > self.cfg.max_events:
                 raise RuntimeError("orchestrator event budget exceeded")
             now, _, kind, payload = heapq.heappop(self._evq)
+            if self._sanitizer is not None:
+                self._sanitizer.on_clock(now)
             if kind == "worker":
                 wid, ver = payload
                 lane = self.lanes[wid]
+                if self._sanitizer is not None:
+                    self._sanitizer.on_worker_event(
+                        wid, ver == lane.version, lane.alive
+                    )
                 if ver != lane.version:
                     continue  # stale event superseded by a replan
                 self._worker_pass(lane, now)
@@ -742,6 +762,10 @@ class Orchestrator:
 
         unfinished = [t.traj_id for t in self.trajs if not t.finished and not t.shed]
         assert not unfinished, f"orchestrator drained with live trajectories {unfinished}"
+        # balance checks + raise on any accumulated invariant violation
+        sanitizer_report = (
+            self._sanitizer.finalize() if self._sanitizer is not None else {}
+        )
         delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
         return OrchestratorResult(
             makespan=max(t.finish_time for t in self.trajs),
@@ -771,4 +795,5 @@ class Orchestrator:
             tenant_report=(self.controller.tenant_report()
                            if self.cfg.open_loop and self.controller is not None
                            else {}),
+            sanitizer=sanitizer_report,
         )

@@ -155,7 +155,12 @@ def harvest(trajectories: Sequence[Trajectory], first_step_only: bool = False
     feats: list[list[float]] = []
     remaining: list[float] = []
     for traj in trajectories:
-        replay = Trajectory(prompt_id=traj.prompt_id, sample_id=traj.sample_id,
+        # reuse the source id: a feature replay IS the same trajectory, and
+        # drawing a fresh id would burn the process-global counter (later
+        # batches' ids — which seed per-(traj, step) tool outcomes — would
+        # then depend on how many harvests ran before them)
+        replay = Trajectory(traj_id=traj.traj_id, prompt_id=traj.prompt_id,
+                            sample_id=traj.sample_id,
                             prompt_tokens=traj.prompt_tokens,
                             context_tokens=traj.prompt_tokens)
         # step-0 (prompt only) tuple

@@ -135,7 +135,10 @@ class LegacyRolloutWorker:
             logits, cache = _decode(self.cfg, self.params, cache, last)
             toks = sample_slots(step_keys, logits, self.sampler)
             self.decode_steps += 1
-            toks_np = np.asarray(toks)
+            # the per-token host sync IS the legacy baseline: python-side stop
+            # bookkeeping every step is the cost worker.py's fused _decode_loop
+            # (lax.scan + on-device live mask) exists to eliminate
+            toks_np = np.asarray(toks)  # heddle: noqa HDL003 -- pre-fusion baseline, measured as such
             for i, s in enumerate(seqs):
                 if not live[i]:
                     continue

@@ -66,6 +66,8 @@ class RuntimeConfig:
     preemption_margin: float = 1.0
     preemption_floor: float = 2.0
     trace: bool = False                  # record the decision trace (parity harness)
+    sanitize: bool = False               # validate the decision stream
+                                         # (repro.analysis.sanitize.TraceSanitizer)
     seed: int = 0
     checkpoint_dir: str | None = None    # persist tool-boundary checkpoints here
     open_loop: bool = False              # serve arrival-stamped trajectories
@@ -101,6 +103,7 @@ class RuntimeResult:
     peak_live_global: int = 0
     peak_live_worker: int = 0
     tenant_report: dict = field(default_factory=dict)
+    sanitizer: dict = field(default_factory=dict)  # TraceSanitizer report ({} = off)
 
 
 @dataclass
@@ -386,7 +389,7 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
                            open_loop=config.open_loop,
                            preemption_margin=config.preemption_margin,
                            preemption_floor=config.preemption_floor,
-                           trace=config.trace),
+                           trace=config.trace, sanitize=config.sanitize),
         controller=controller, faults=faults)
     return orch.run()
 
@@ -504,7 +507,8 @@ class RolloutRuntime:
                                open_loop=cfg.open_loop,
                                preemption_margin=cfg.preemption_margin,
                                preemption_floor=cfg.preemption_floor,
-                               max_events=2_000_000, trace=cfg.trace),
+                               max_events=2_000_000, trace=cfg.trace,
+                               sanitize=cfg.sanitize),
             controller=self.controller, faults=self.faults)
         res = self._orch.run()
         for view in self.backend.views:              # final telemetry snapshot
@@ -538,6 +542,7 @@ class RolloutRuntime:
             peak_live_global=res.peak_live_global,
             peak_live_worker=res.peak_live_worker,
             tenant_report=res.tenant_report,
+            sanitizer=res.sanitizer,
         )
 
     # ------------------------------------------------------------ §6 feedback loop

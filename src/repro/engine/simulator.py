@@ -83,6 +83,7 @@ class SimConfig:
     model_kv_heads: int = 8
     model_head_dim: int = 128
     seed: int = 0
+    sanitize: bool = False               # TraceSanitizer over the decision stream
 
 
 @dataclass
@@ -145,7 +146,8 @@ class RolloutSimulator:
             backend, self.trajs,
             OrchestratorConfig(scheduler=cfg.scheduler, max_active=cfg.max_batch,
                                migration=cfg.migration and heddle,
-                               max_events=5_000_000, timeline_every=256),
+                               max_events=5_000_000, timeline_every=256,
+                               sanitize=cfg.sanitize),
             controller=self.controller if heddle else None,
             routing=self.routing, predictor=self.predictor)
         res = orch.run()

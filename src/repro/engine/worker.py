@@ -557,7 +557,7 @@ class RolloutWorker:
             self.pool, last, live, em = _decode_loop(
                 self.cfg, self.params, self.pool, last, live, keys,
                 step, stop_token, self.sampler, mesh=self.mesh)
-            parts.append(np.asarray(em))                    # (step, B)
+            parts.append(em)   # device-resident: D2H deferred past the loop
             remaining -= step
             ran += step
             self.decode_steps += step
@@ -565,8 +565,10 @@ class RolloutWorker:
                 lane_steps += step * len(requested)
             else:
                 # live batch after the chunk: lanes stopping mid-call must not
-                # keep inflating the calibration's mean-batch regressor
-                n_live = int(np.asarray(live).sum())
+                # keep inflating the calibration's mean-batch regressor.  The
+                # sync is the point — it is the early-exit check that stops
+                # decoding once every requested lane hit its stop token.
+                n_live = int(np.asarray(live).sum())  # heddle: noqa HDL003 -- deliberate early-exit sync, one per chunk
                 lane_steps += step * n_live
                 if remaining > 0 and n_live == 0:
                     break
@@ -576,8 +578,8 @@ class RolloutWorker:
             self.decode_timed_steps += ran
             self.decode_timed_lane_steps += lane_steps
         self.decode_calls += 1
-        emitted = (np.concatenate(parts, axis=0) if parts
-                   else np.zeros((0, B), np.int32))    # n_tokens == 0 edge
+        emitted = (np.concatenate([np.asarray(p) for p in parts], axis=0)
+                   if parts else np.zeros((0, B), np.int32))  # n_tokens == 0 edge
         out: dict[int, list[int]] = {sid: [] for sid in seq_ids}
         for sid in requested:
             seq = self.store[sid]

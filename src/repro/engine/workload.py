@@ -218,8 +218,11 @@ def replay_finished(trajectories: list[Trajectory]) -> list[Trajectory]:
     out = []
     for t in trajectories:
         plan: TrajectoryPlan = t.payload
-        ft = Trajectory(prompt_id=t.prompt_id, sample_id=t.sample_id,
-                        prompt_tokens=t.prompt_tokens, context_tokens=t.prompt_tokens)
+        # same trajectory, materialized: reuse the id instead of burning the
+        # global counter (keeps later batches' ids independent of this harvest)
+        ft = Trajectory(traj_id=t.traj_id, prompt_id=t.prompt_id,
+                        sample_id=t.sample_id, prompt_tokens=t.prompt_tokens,
+                        context_tokens=t.prompt_tokens)
         for s in range(plan.num_steps):
             ft.record_step(StepRecord(s, plan.gen_tokens[s], plan.tool_latency[s],
                                       tool_failed=plan.tool_failed[s],

@@ -182,6 +182,10 @@ class HeddleTrainer:
             for i in range(tcfg.n_workers)
         ]
         self._history: list[Trajectory] = []
+        # instance-local trajectory-id base: ids seed per-(traj, step) tool
+        # outcomes, so drawing them from the process-global counter would make
+        # rollout behavior depend on whatever else ran in this process
+        self._tid_base = 0
         self.last_rollout: RuntimeResult | None = None
         self.step_count = 0
 
@@ -200,6 +204,7 @@ class HeddleTrainer:
             ptoks = task.prompt_tokens()
             for g in range(tcfg.group_size):
                 t = Trajectory(
+                    traj_id=self._tid_base + len(trajs),
                     prompt_id=pid,
                     sample_id=g,
                     prompt_tokens=len(ptoks),
@@ -208,6 +213,7 @@ class HeddleTrainer:
                 trajs.append(t)
                 prompts[t.traj_id] = list(ptoks)
                 tasks_by[t.traj_id] = task
+        self._tid_base += len(trajs)
         env = TaskEnvironment(
             tasks_by,
             {tid: len(p) for tid, p in prompts.items()},

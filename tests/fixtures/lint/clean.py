@@ -1,0 +1,12 @@
+"""Negative fixture: control-plane-legal code — zero violations expected."""
+import numpy as np
+
+
+def advance(active: set, rng: np.random.Generator):
+    order = sorted(active)
+    weights = rng.random(len(order))
+    return [tid for tid, _ in zip(order, weights)]
+
+
+def virtual_clock(now: float, dt: float) -> float:
+    return now + dt

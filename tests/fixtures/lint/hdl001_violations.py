@@ -1,0 +1,35 @@
+"""HDL001 fixture: wall-clock and unseeded-RNG calls (linted as CONTROL|CORE).
+
+Line numbers are pinned by tests/test_analysis.py — keep edits append-only.
+"""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def stamp_event():
+    return time.time()                      # line 13: wall clock
+
+
+def elapsed(t0):
+    return time.perf_counter() - t0         # line 17: telemetry clock (CORE)
+
+
+def jitter():
+    return np.random.rand()                 # line 21: unseeded global RNG
+
+
+def pick(items):
+    return random.choice(items)             # line 25: unseeded stdlib RNG
+
+
+def created_at():
+    return datetime.now()                   # line 29: wall clock
+
+
+def seeded_ok(seed):
+    rng = np.random.default_rng(seed)       # fine: explicit seeded generator
+    local = random.Random(seed)             # fine: seeded instance
+    return rng.random() + local.random()

@@ -1,0 +1,33 @@
+"""HDL002 fixture: hash-order iteration in decision paths (linted as CONTROL).
+
+Line numbers are pinned by tests/test_analysis.py — keep edits append-only.
+"""
+
+
+def drain(active: set, table: dict):
+    out = []
+    for tid in active:                      # line 9: set iteration
+        out.append(tid)
+    for key in table.keys():                # line 11: dict.keys() iteration
+        out.append(key)
+    return out
+
+
+def union_walk(a: set, b: set):
+    return [x for x in a | b]               # line 17: set-union comprehension
+
+
+def sorted_ok(active: set, table: dict):
+    out = [tid for tid in sorted(active)]   # fine: canonical order
+    out += [k for k in sorted(table)]       # fine
+    return out
+
+
+def local_list_ok(degrees):
+    # a *different* function rebinding the name to a set must not leak here
+    return [d for d in degrees]             # fine: param, not a set in scope
+
+
+def _rebinds_elsewhere(degrees):
+    degrees = set(degrees)
+    return sorted(degrees)                  # fine: sorted

@@ -1,0 +1,33 @@
+"""HDL003 fixture: jit static-argname hygiene + host syncs in hot loops.
+
+Line numbers are pinned by tests/test_analysis.py — keep edits append-only.
+"""
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit                                    # line 11: mesh not pinned static
+def shard_step(params, batch, mesh):
+    return params, batch, mesh
+
+
+def decode_loop(tokens, emitted):
+    parts = []
+    for tok in tokens:
+        parts.append(np.asarray(tok))       # line 19: host sync per token
+        done = emitted.item()               # line 20: host sync per token
+        if done:
+            break
+    return parts
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def shard_step_ok(params, batch, mesh):     # fine: mesh is static
+    return params, batch, mesh
+
+
+def cold_path(xs):
+    # not a decode/prefill/extend function: syncs here are legal
+    return [np.asarray(x) for x in xs]

@@ -1,0 +1,27 @@
+"""HDL004 fixture: event-kind push/handle drift + unstamped tuple payloads.
+
+Line numbers are pinned by tests/test_analysis.py — keep edits append-only.
+"""
+
+
+class MiniLoop:
+    def __init__(self):
+        self.heap = []
+        self.version = 0
+
+    def schedule(self, t, tid):
+        self._push(t, "worker", (tid, self.version))        # fine: stamped
+        self._push(t, "orphan", (tid, self.version))        # line 14: no handler
+        self._push(t, "tool_done", (tid,))                  # line 15: unstamped
+
+    def _push(self, t, kind, payload):
+        self.heap.append((t, kind, payload))
+
+    def run(self):
+        for t, kind, payload in self.heap:
+            if kind == "worker":
+                pass
+            elif kind == "tool_done":
+                pass
+            elif kind == "ghost":                           # line 26: never pushed
+                pass

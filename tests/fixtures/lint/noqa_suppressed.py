@@ -1,0 +1,15 @@
+"""noqa fixture: every violation here carries a justification suppression."""
+import time
+
+
+def stamp():
+    return time.time()  # heddle: noqa HDL001 -- fixture: telemetry only
+
+
+def drain(active: set):
+    return [t for t in active]  # heddle: noqa -- fixture: order-insensitive sum
+
+
+def half_suppressed(active: set):
+    # wrong id: HDL001 noqa does NOT silence the HDL002 hit on line 15
+    return [t for t in active]  # heddle: noqa HDL001

@@ -1,0 +1,291 @@
+"""heddle-lint: rule precision on pinned fixtures, noqa suppression, backend
+protocol conformance, and TraceSanitizer invariant enforcement."""
+
+from pathlib import Path
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis.lint import lint_paths, lint_source, main as lint_main, \
+    scope_for_path
+from repro.analysis.protocol import check_backend
+from repro.analysis.rules.base import Scope
+from repro.analysis.sanitize import TraceSanitizer, TraceViolationError
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+SRC = Path(__file__).parent.parent / "src" / "repro"
+FULL = Scope.CONTROL | Scope.CORE
+
+
+def _lint(name: str, scope: Scope = FULL):
+    return lint_source((FIXTURES / name).read_text(), path=name, scope=scope)
+
+
+def _hits(name: str, scope: Scope = FULL):
+    return [(v.rule, v.line) for v in _lint(name, scope)]
+
+
+# ------------------------------------------------------------- rule precision
+
+def test_hdl001_wall_clock_and_rng_exact_lines():
+    assert _hits("hdl001_violations.py") == [
+        ("HDL001", 13),   # time.time()
+        ("HDL001", 17),   # time.perf_counter() (CORE only)
+        ("HDL001", 21),   # np.random.rand()
+        ("HDL001", 25),   # random.choice()
+        ("HDL001", 29),   # datetime.now()
+    ]
+
+
+def test_hdl001_perf_counter_is_core_only():
+    """Wall telemetry is legal in the engine (CONTROL without CORE)."""
+    lines = [line for _, line in _hits("hdl001_violations.py", Scope.CONTROL)]
+    assert 17 not in lines
+    assert lines == [13, 21, 25, 29]
+
+
+def test_hdl002_set_iteration_exact_lines():
+    assert _hits("hdl002_violations.py") == [
+        ("HDL002", 9),    # for tid in active (set-annotated param)
+        ("HDL002", 11),   # table.keys()
+        ("HDL002", 17),   # comprehension over a | b
+    ]
+
+
+def test_hdl002_does_not_pool_names_across_functions():
+    """`degrees` is a set in one function and a Sequence param in another;
+    the latter must not be flagged (the resource_manager false positive)."""
+    assert all(l not in (28, 33) for _, l in _hits("hdl002_violations.py"))
+
+
+def test_hdl003_jit_and_hot_loop_sync_exact_lines():
+    assert _hits("hdl003_violations.py") == [
+        ("HDL003", 11),   # @jax.jit with traced mesh
+        ("HDL003", 19),   # np.asarray in decode loop
+        ("HDL003", 20),   # .item() in decode loop
+    ]
+
+
+def test_hdl004_event_kind_drift_exact_lines():
+    assert _hits("hdl004_violations.py") == [
+        ("HDL004", 14),   # pushed kind with no handler
+        ("HDL004", 15),   # tuple payload without version stamp
+        ("HDL004", 26),   # handler branch for a never-pushed kind
+    ]
+
+
+def test_clean_fixture_has_zero_violations():
+    assert _lint("clean.py") == []
+
+
+# ---------------------------------------------------------------- suppression
+
+def test_noqa_suppresses_by_id_and_bare():
+    """Lines 6 (HDL001 noqa) and 10 (bare noqa) are silenced; the HDL001
+    noqa on line 15 does NOT silence that line's HDL002 hit."""
+    assert _hits("noqa_suppressed.py") == [("HDL002", 15)]
+
+
+# -------------------------------------------------------------------- scoping
+
+def test_scope_for_path():
+    assert scope_for_path("src/repro/core/orchestrator.py") == FULL
+    assert scope_for_path("src/repro/engine/worker.py") == Scope.CONTROL
+    assert scope_for_path("src/repro/rl/loop.py") == Scope.CONTROL
+    assert scope_for_path("src/repro/analysis/lint.py") == Scope.NONE
+    assert scope_for_path("benchmarks/common.py") == Scope.NONE
+
+
+def test_determinism_rules_gated_outside_control_plane():
+    """HDL001/HDL002 only bind in core/engine/rl; HDL003/HDL004 everywhere."""
+    assert _hits("hdl001_violations.py", Scope.NONE) == []
+    assert _hits("hdl002_violations.py", Scope.NONE) == []
+    assert _hits("hdl003_violations.py", Scope.NONE) != []
+    assert _hits("hdl004_violations.py", Scope.NONE) != []
+
+
+def test_cli_exit_status_counts_violations(capsys):
+    """The CLI derives scope from the path: fixtures outside src/repro get
+    only the unscoped rules, and the exit code is the violation count."""
+    rc = lint_main([str(FIXTURES / "hdl003_violations.py")])
+    assert rc == 3
+    out = capsys.readouterr().out
+    assert "HDL003" in out and "hdl003_violations.py" in out
+
+
+def test_source_tree_is_lint_clean():
+    """The enforced gate: the shipped tree carries zero unsuppressed
+    violations (CI runs the same command)."""
+    assert lint_paths([str(SRC)]) == []
+
+
+def test_syntax_error_reported_not_raised():
+    vs = lint_source("def broken(:\n", path="bad.py")
+    assert [v.rule for v in vs] == ["HDL000"]
+
+
+# ------------------------------------------------------ protocol conformance
+
+def test_shipped_backends_conform():
+    from repro.engine.backends import EngineBackend, SimBackend
+    assert check_backend(SimBackend) == []
+    assert check_backend(EngineBackend) == []
+
+
+def test_protocol_checker_rejects_drifted_backend():
+    """A fake backend with the classic drift modes: renamed positional
+    parameter, dropped protocol default, missing method, extra required
+    parameter, missing attribute."""
+
+    class DriftedBackend:
+        @property
+        def n_workers(self) -> int:
+            return 1
+
+        def admit(self, trajs, now=0.0) -> None:        # renamed param
+            """..."""
+
+        def ready_time(self, wid: int, now: float) -> float:
+            """..."""
+
+        def dispatch(self, wid: int, traj) -> float:    # dropped `fresh`
+            """..."""
+
+        def preempt(self, wid: int, traj, hard) -> None:  # extra required
+            """..."""
+
+        def advance(self, wid: int, now: float) -> "list[int]":
+            """..."""
+
+        def next_completion(self, wid: int, now: float) -> "float | None":
+            """..."""
+
+        def tool_submit(self, traj):
+            """..."""
+
+        def tool_absorb(self, traj) -> None:
+            """..."""
+
+        def can_migrate(self, traj) -> bool:
+            """..."""
+
+        def migrate_out(self, traj, dst: int) -> float:
+            """..."""
+
+        def migrate_in(self, traj, dst: int) -> None:
+            """..."""
+        # release() missing entirely; `interruptible` never assigned
+
+    findings = "\n".join(check_backend(DriftedBackend))
+    assert "missing attribute `interruptible`" in findings
+    assert "`trajs`, protocol says `trajectories`" in findings
+    assert "missing parameter `fresh`" in findings
+    assert "extra required parameter `hard`" in findings
+    assert "missing method `release`" in findings
+
+
+# ------------------------------------------------------------ TraceSanitizer
+
+def _traj(tid, sheddable=True, tier=1):
+    return SimpleNamespace(traj_id=tid, sheddable=sheddable, tenant_tier=tier)
+
+
+def _san(n=4, workers=2, max_active=2):
+    return TraceSanitizer([_traj(i) for i in range(n)], n_workers=workers,
+                          max_active=max_active)
+
+
+def test_sanitizer_clean_lifecycle_reports_zero():
+    s = _san()
+    s.on_clock(0.0)
+    s.observe("start", 0, 0)
+    s.on_clock(1.0)
+    s.observe("step", 0, 0)
+    s.observe("finish", 0, 0)
+    rep = s.finalize()
+    assert rep["violations"] == 0 and rep["events"] == 2
+    assert rep["wall_s"] >= 0.0
+
+
+def test_sanitizer_rejects_backwards_virtual_time():
+    s = _san()
+    s.on_clock(2.0)
+    s.on_clock(1.0)
+    with pytest.raises(TraceViolationError, match="backwards"):
+        s.finalize()
+
+
+def test_sanitizer_rejects_double_dispatch():
+    s = _san()
+    s.observe("start", 0, 0)
+    s.observe("start", 0, 1)        # still active on worker 0
+    with pytest.raises(TraceViolationError, match="slot conservation"):
+        s.finalize()
+
+
+def test_sanitizer_enforces_max_active():
+    s = _san(max_active=1)
+    s.observe("start", 0, 0)
+    s.observe("start", 1, 0)
+    with pytest.raises(TraceViolationError, match="max_active"):
+        s.finalize()
+
+
+def test_sanitizer_rejects_dispatch_onto_dead_worker():
+    s = _san()
+    s.observe("worker_death", -1, 0)
+    s.observe("start", 0, 0)
+    with pytest.raises(TraceViolationError, match="dead worker"):
+        s.finalize()
+
+
+def test_sanitizer_stale_guard():
+    s = _san()
+    s.on_worker_event(0, applied=False, lane_alive=False)   # dropped: legal
+    assert s.stale_worker_events == 1
+    s.observe("start", 0, 0)
+    s.observe("step", 0, 0)
+    s.finalize()                                            # no violation
+    s2 = _san()
+    s2.on_worker_event(0, applied=True, lane_alive=False)   # guard breach
+    with pytest.raises(TraceViolationError, match="stale-guard"):
+        s2.finalize()
+
+
+def test_sanitizer_migration_commit_abort_balance():
+    s = _san()
+    s.observe("migrate", 0, 1)
+    with pytest.raises(TraceViolationError, match="on the wire"):
+        s.finalize()
+    s = _san()
+    s.observe("migrate", 0, 1)
+    s.observe("migrate_done", 0, 1)
+    assert s.finalize()["migrations"] == {"launched": 1, "committed": 1,
+                                          "aborted": 0}
+    s = _san()                       # dst dies mid-flight: recovery aborts
+    s.observe("migrate", 0, 1)
+    s.observe("worker_death", -1, 1)
+    s.observe("recover", 0, 0)
+    s.observe("restore_done", 0, 0)
+    assert s.finalize()["migrations"]["aborted"] == 1
+
+
+def test_sanitizer_tenancy_gold_never_shed():
+    gold = _traj(0, sheddable=False, tier=0)
+    s = TraceSanitizer([gold, _traj(1)], n_workers=1, max_active=2)
+    s.observe("shed", 1, -1)         # sheddable tier-1: legal
+    s.finalize()
+    s = TraceSanitizer([gold, _traj(1)], n_workers=1, max_active=2)
+    s.observe("shed", 0, -1)
+    with pytest.raises(TraceViolationError, match="gold"):
+        s.finalize()
+
+
+def test_sanitizer_rejects_activity_after_finish():
+    s = _san()
+    s.observe("start", 0, 0)
+    s.observe("step", 0, 0)
+    s.observe("finish", 0, 0)
+    s.observe("start", 0, 1)
+    with pytest.raises(TraceViolationError, match="after it finished"):
+        s.finalize()

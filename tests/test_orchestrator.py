@@ -32,12 +32,16 @@ def _parity_pair(cfg, params, migration: bool):
     """
     batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
     twin = copy.deepcopy(batch)
+    # sanitize=True: the TraceSanitizer validates every decision on BOTH
+    # backends (and run() raises on any invariant violation), so parity is
+    # proven over a stream that is itself checked for causal legality
     rcfg = RuntimeConfig(scheduler="pps", migration=migration, max_active=2,
                          quantum=8, link_bandwidth=math.inf, trace=True,
-                         seed=SEED)
+                         seed=SEED, sanitize=True)
     eng = make_runtime(cfg, params, batch, predictor, n_workers=2,
                        config=rcfg).run()
     sim = run_on_sim(twin, predictor, n_workers=2, config=rcfg)
+    assert eng.sanitizer["violations"] == sim.sanitizer["violations"] == 0
     return eng, sim
 
 
@@ -119,6 +123,116 @@ def test_tool_executor_seeded_per_traj_step():
         y.invoke(traj_id=9, step=2)
     assert y.invoke(traj_id=5, step=0) == first
     assert x.invoke(traj_id=5, step=1) != first      # per-step streams differ
+
+
+# --------------------------------------- determinism regressions (heddle-lint)
+
+def test_preempt_candidates_arrive_in_canonical_order(monkeypatch):
+    """Regression (HDL002): the dispatch loop iterated ``lane.active`` — a set
+    — when building preempt_victim's candidate list, so priority ties broke by
+    hash order and CPython set internals leaked into the decision trace.  The
+    orchestrator must hand the scheduler a canonically ordered (sorted by
+    traj_id) candidate list at every preemption decision."""
+    from repro.core.scheduler import PPSScheduler
+
+    seen: list[list[int]] = []
+    orig = PPSScheduler.preempt_victim
+
+    def spy(self, active):
+        seen.append([t.traj_id for t in active])
+        return orig(self, active)
+
+    monkeypatch.setattr(PPSScheduler, "preempt_victim", spy)
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    res = run_on_sim(batch, predictor, n_workers=2,
+                     config=RuntimeConfig(scheduler="pps", migration=True,
+                                          max_active=2, quantum=8, seed=SEED))
+    assert res.preemptions > 0 and len(seen) > 0    # the spy actually bit
+    assert all(tids == sorted(tids) for tids in seen)
+
+
+def test_decode_loop_defers_host_sync_past_the_loop():
+    """Regression (HDL003): the worker decode loop called ``np.asarray(em)``
+    on every chunk — a device→host sync per iteration.  Emitted tokens must
+    stay device-resident inside the loop (one justified early-exit sync
+    excepted) and be fetched once after it."""
+    import ast
+    import inspect
+    import textwrap
+
+    from repro.engine import worker as W
+
+    src = textwrap.dedent(inspect.getsource(W.RolloutWorker.decode))
+    tree = ast.parse(src)
+    loop = next(n for n in ast.walk(tree) if isinstance(n, ast.While))
+    syncs = [n.lineno for n in ast.walk(loop)
+             if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+             and n.func.attr == "asarray"]
+    # exactly the one noqa'd early-exit liveness check remains in-loop
+    assert len(syncs) == 1
+    lines = src.splitlines()
+    assert "noqa HDL003" in lines[syncs[0] - 1]
+
+
+def test_pinned_workload_trace_unchanged_by_lint_fixes():
+    """The HDL002/HDL003 fixes must be trace-neutral: on the pinned seed-5
+    smoke workload the virtual makespan and decision counters are unchanged
+    (verified against pre-fix code; small dense int ids already iterated in
+    ascending set order — the sorted() fix removes the hazard, not current
+    behavior).  Any future change to these numbers is a decision-trace
+    change and needs the BENCH_* artifacts regenerated."""
+    batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
+    res = run_on_sim(batch, predictor, n_workers=2,
+                     config=RuntimeConfig(scheduler="pps", migration=True,
+                                          max_active=2, quantum=8, seed=SEED,
+                                          sanitize=True))
+    assert res.makespan == 2.975663591992511
+    assert res.preemptions == 12 and res.migrations == 28
+    assert res.events == 604
+    assert res.sanitizer["violations"] == 0
+
+
+def test_replays_do_not_consume_the_global_id_counter():
+    """Regression: predictor.harvest and workload.replay_finished built
+    throwaway replay Trajectories with default (global-counter) ids, so every
+    harvest shifted the ids of all later batches — and ids seed per-(traj,
+    step) tool outcomes, making rollout behavior depend on unrelated prior
+    runs in the same process (the trainer test failed or passed depending on
+    which tests ran before it)."""
+    from repro.core.predictor import harvest
+    from repro.core.trajectory import StepRecord, Trajectory
+
+    src = Trajectory(prompt_id=0, sample_id=0, prompt_tokens=4,
+                     context_tokens=4)
+    src.record_step(StepRecord(0, 8, 0.1, tool_output_tokens=2))
+    src.record_tool_output(2)
+    src.finished = True
+    src.true_total_tokens = 8
+    before = Trajectory(prompt_id=9, sample_id=0, prompt_tokens=1,
+                        context_tokens=1)
+    harvest([src])
+    harvest([src], first_step_only=True)
+    after = Trajectory(prompt_id=9, sample_id=1, prompt_tokens=1,
+                       context_tokens=1)
+    assert after.traj_id == before.traj_id + 1
+
+
+def test_trainer_ids_are_instance_local():
+    """The trainer's trajectory ids must come from an instance-local base (0,
+    1, 2, ...), not the process-global counter."""
+    import repro.rl.data as D
+    from repro.rl.loop import HeddleTrainer, TrainerConfig
+    from repro.configs import get_config
+
+    cfg = get_config("smollm_135m").reduced(n_periods=1)
+    tr = HeddleTrainer(cfg, TrainerConfig(group_size=2, n_workers=1, seed=0,
+                                          max_steps_per_traj=1))
+    tr.rollout(D.sample_tasks(2, seed=1))
+    ids = sorted(t.traj_id for t in tr.last_rollout.trajectories)
+    assert ids == [0, 1, 2, 3]
+    tr.rollout(D.sample_tasks(2, seed=2))
+    ids = sorted(t.traj_id for t in tr.last_rollout.trajectories)
+    assert ids == [4, 5, 6, 7]
 
 
 # ------------------------------------------------- RL training on the stack
