@@ -1,0 +1,326 @@
+"""Async rollout-as-a-service benchmark: streaming harvest vs the sync barrier.
+
+The synchronous trainer pays the long tail once per iteration: every GRPO
+update waits for the slowest trajectory of its batch, so training-step
+utilization collapses exactly on the tail-dominated workloads the paper
+targets.  The async plane (``repro.rl.service``) removes the barrier —
+FINISHED trajectories stream into a bounded :class:`ReplayBuffer` the moment
+they harvest, the consumer trains on the first ``groups_per_update`` complete
+groups while stragglers keep decoding, and each update publishes an in-flight
+weight sync that workers adopt as their resident lanes drain.
+
+Measured on the same seeded long-tail workload, same total work (``n_updates
+x groups_per_update`` GRPO groups), same virtual-time train cost per update:
+
+  * **time-to-N-updates** — sync = sum of per-chunk makespans + train time;
+    async = one streaming run with updates overlapping the rollout tail;
+  * **training-step utilization** — fraction of the virtual timeline the
+    trainer is busy (``n x train_s / time_to_n``);
+  * **staleness discipline** — max observed ``published_epoch -
+    weight_epoch`` over every consumed trajectory, with zero stale discards
+    (the bound is enforced, not merely hoped for).
+
+Both execution backends run the async plane through the one orchestrator;
+``--smoke`` (CI) asserts async strictly beats sync on BOTH backends, the
+staleness bound holds with zero discards, the per-trajectory weight-epoch
+stamps are bit-identical across backends, and the TraceSanitizer reports
+zero violations.  Emits ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_async.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from benchmarks.common import emit, sanitizer_summary, write_json_atomic
+
+SEED = 5
+
+# (n_updates, groups_per_update, group_size, max_active)
+FULL = (6, 2, 4, 2)
+SMOKE = (3, 2, 4, 2)
+
+TRAIN_S = 1.0  # virtual seconds one GRPO update occupies the trainer
+MAX_STALENESS = 2  # consumed trajectories may lag the published epoch this far
+# groups resident in the service before the first update; kept equal to
+# groups_per_update so each wave fully drains between updates — workers cut
+# over (drain fence) every epoch and admission stamps track the published
+# epoch instead of stalling at 0
+BACKLOG_GROUPS = 2
+
+# full mode: trainer-cost sweep for the speedup curve (sim backend).  Beyond
+# ~2x the wave rollout time the consumer outpaces what the drain fence can
+# restamp and the staleness bound starts forcing discards — the sweep stops
+# at the edge of the zero-discard regime.
+TRAIN_SWEEP = (0.25, 0.5, 1.0, 2.0)
+
+
+def _runtime_config(max_active: int, seed: int, sanitize: bool):
+    from repro.engine.runtime import RuntimeConfig
+    # link_bandwidth=inf keeps migration decision-level (zero-cost transfers),
+    # the regime where the sim/engine decision traces are bit-identical — the
+    # async numbers below are then backend-independent by construction.
+    return RuntimeConfig(scheduler="pps", migration=True, max_active=max_active,
+                         quantum=8, seed=seed, link_bandwidth=math.inf,
+                         sanitize=sanitize)
+
+
+def _group_list(batch):
+    """Groups in generation order, keyed by prompt_id (GRPO siblings)."""
+    by_pid: dict[int, list] = {}
+    for t in batch:
+        by_pid.setdefault(t.prompt_id, []).append(t)
+    return list(by_pid.values())
+
+
+def run_sync_case(cfg, params, backend: str, shape, seed: int,
+                  sanitize: bool = False, train_s: float = TRAIN_S) -> dict:
+    """The barrier baseline: one closed-loop rollout per update, serialized.
+
+    Chunk k's makespan is gated by its slowest trajectory (the tail); the
+    trainer then runs for ``TRAIN_S`` while the fleet idles.  Weight sync is
+    free here — everything between iterations is torn down anyway.
+    """
+    from repro.engine.runtime import (build_workbench, make_runtime,
+                                     run_on_sim, synth_prompts)
+    n_updates, gpu, gsz, max_active = shape
+    batch, predictor = build_workbench(n_prompts=n_updates * gpu,
+                                       group_size=gsz, seed=seed)
+    groups = _group_list(batch)
+    rcfg = _runtime_config(max_active, seed, sanitize)
+    clock = 0.0
+    times: list[float] = []
+    reports = []
+    for k in range(n_updates):
+        chunk = [t for g in groups[k * gpu:(k + 1) * gpu] for t in g]
+        if backend == "sim":
+            lens = {tid: len(p)
+                    for tid, p in synth_prompts(chunk, seed=seed).items()}
+            res = run_on_sim(chunk, predictor, n_workers=2, config=rcfg,
+                             prompt_lens=lens)
+        else:
+            res = make_runtime(cfg, params, chunk, predictor, n_workers=2,
+                               config=rcfg).run()
+        clock += res.makespan + train_s
+        times.append(clock)
+        reports.append(res.sanitizer)
+    return {
+        "time_to_updates_s": times,
+        "time_to_n_s": times[-1],
+        "rollout_s": times[-1] - n_updates * train_s,
+        "train_utilization": n_updates * train_s / times[-1],
+        "sanitizer_reports": reports,
+    }
+
+
+def run_async_case(cfg, params, backend: str, shape, seed: int,
+                   sanitize: bool = False, train_s: float = TRAIN_S) -> dict:
+    """The streaming plane: one resident fleet, updates overlap the tail.
+
+    Submits ``BACKLOG_GROUPS`` up front and re-injects one wave per update
+    (the ``train_async`` pattern), so admission stamps advance with the
+    published epoch and the staleness bound binds for real.  Each update
+    consumes exactly ``groups_per_update`` complete groups FIFO from the
+    replay buffer and publishes its weights at the virtual instant the
+    trainer frees up (``sync_weights(at=...)``).
+    """
+    from repro.engine.runtime import (build_workbench, make_runtime,
+                                     make_sim_components, synth_prompts)
+    from repro.rl.service import ReplayBuffer, RolloutService
+    n_updates, gpu, gsz, max_active = shape
+    pool = n_updates * gpu
+    batch, predictor = build_workbench(n_prompts=pool, group_size=gsz,
+                                       seed=seed)
+    groups = _group_list(batch)
+    rcfg = _runtime_config(max_active, seed, sanitize)
+    if backend == "sim":
+        lens = {tid: len(p)
+                for tid, p in synth_prompts(batch, seed=seed).items()}
+        sim_backend, controller = make_sim_components(
+            predictor, 2, rcfg, prompt_lens=lens)
+        svc = RolloutService(sim_backend, controller, rcfg)
+    else:
+        runtime = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                               config=rcfg)
+        svc = RolloutService(runtime.backend, runtime.controller, rcfg)
+
+    # traj_ids are globally allocated (each build_workbench call gets a fresh
+    # range), so cross-run stamp comparison keys on batch position instead
+    order = {t.traj_id: i for i, t in enumerate(batch)}
+    backlog = min(BACKLOG_GROUPS, pool)
+    svc.submit([t for g in groups[:backlog] for t in g])
+    next_wave = backlog
+    buffer = ReplayBuffer(capacity=pool * gsz, group_size=gsz)
+    times: list[float] = []
+    staleness: list[int] = []
+    stamps: dict[int, int] = {}
+    update_free = 0.0
+    for traj in svc.stream():
+        stamps[order[traj.traj_id]] = traj.weight_epoch
+        buffer.add(traj)
+        while (len(times) < n_updates
+               and buffer.ready_groups >= gpu):
+            taken = buffer.take(gpu, epoch=svc.epoch,
+                                max_staleness=MAX_STALENESS)
+            if not taken:
+                break
+            start = max(svc.now, update_free)
+            update_free = start + train_s
+            times.append(update_free)
+            staleness.extend(svc.epoch - t.weight_epoch
+                             for g in taken for t in g)
+            if len(times) < n_updates:
+                svc.sync_weights(at=update_free)
+                wave = groups[next_wave:next_wave + len(taken)]
+                next_wave += len(taken)
+                if wave:
+                    svc.submit([t for g in wave for t in g])
+        if len(times) >= n_updates:
+            break
+    res = svc.close()
+    for t in res.trajectories:  # drained stragglers after the Nth update
+        stamps.setdefault(order[t.traj_id], t.weight_epoch)
+    return {
+        "time_to_updates_s": times,
+        "time_to_n_s": times[-1],
+        "train_utilization": n_updates * train_s / times[-1],
+        "staleness_max": max(staleness),
+        "staleness_mean": sum(staleness) / len(staleness),
+        "consumed": len(staleness),
+        "stale_discards": buffer.stale_discards,
+        "evicted": buffer.evicted,
+        "weight_epochs_published": svc.epoch,
+        "applied_epochs": svc.applied_epochs,
+        "drain_makespan_s": res.makespan,
+        "preemptions": res.preemptions,
+        "migrations": res.migrations,
+        "stamps": stamps,
+        "sanitizer_reports": [res.sanitizer],
+    }
+
+
+def run(smoke: bool = False, seed: int = SEED,
+        json_path: str = "BENCH_async.json") -> dict:
+    shape = SMOKE if smoke else FULL
+    n_updates, gpu, gsz, _ = shape
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("qwen3_1_7b").reduced(n_periods=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    per_backend: dict[str, dict] = {}
+    reports = []
+    for backend in ("engine", "sim"):
+        sync = run_sync_case(cfg, params, backend, shape, seed, sanitize=smoke)
+        async_ = run_async_case(cfg, params, backend, shape, seed,
+                                sanitize=smoke)
+        reports += sync.pop("sanitizer_reports") + async_.pop("sanitizer_reports")
+        stamps = async_.pop("stamps")
+        per_backend[backend] = {
+            "sync": sync,
+            "async": async_,
+            "speedup_time_to_n": sync["time_to_n_s"] / async_["time_to_n_s"],
+            "_stamps": stamps,
+        }
+
+    results: dict = {
+        "workload": {
+            "task": "coding", "seed": seed, "groups": n_updates * gpu,
+            "group_size": gsz, "trajectories": n_updates * gpu * gsz,
+            "workers": 2, "max_active_per_worker": shape[3],
+            "tail": "long-tail agentic plans (build_workbench base_steps=3)",
+        },
+        "consumer": {"n_updates": n_updates, "groups_per_update": gpu,
+                     "train_s": TRAIN_S, "max_staleness": MAX_STALENESS,
+                     "backlog_groups": BACKLOG_GROUPS},
+        "backends": {b: {k: v for k, v in r.items() if k != "_stamps"}
+                     for b, r in per_backend.items()},
+    }
+    if smoke:
+        results["sanitizer"] = sanitizer_summary(reports)
+
+    if not smoke:
+        # ---- speedup vs trainer cost (analytic backend: the curve is a
+        # decision-level property and the sweep stays cheap).  The barrier
+        # baseline pays train_s per chunk serially, so async's edge widens
+        # as updates get more expensive — until the consumer outruns the
+        # drain fence and the staleness bound would start discarding.
+        sweep = []
+        for train_s in TRAIN_SWEEP:
+            a = run_async_case(cfg, params, "sim", shape, seed,
+                               train_s=train_s)
+            a.pop("stamps"), a.pop("sanitizer_reports")
+            s = run_sync_case(cfg, params, "sim", shape, seed,
+                              train_s=train_s)
+            sweep.append({"train_s": train_s,
+                          "sync_time_to_n_s": s["time_to_n_s"],
+                          "async_time_to_n_s": a["time_to_n_s"],
+                          "speedup": s["time_to_n_s"] / a["time_to_n_s"],
+                          "staleness_max": a["staleness_max"],
+                          "stale_discards": a["stale_discards"],
+                          "async_train_utilization": a["train_utilization"]})
+        results["speedup_vs_train_cost"] = sweep
+
+    write_json_atomic(json_path, results)
+
+    eng = per_backend["engine"]
+    emit([
+        ("async_time_to_n_sync_baseline", eng["sync"]["time_to_n_s"] * 1e6,
+         f"util {eng['sync']['train_utilization']:.2f}"),
+        ("async_time_to_n_streaming", eng["async"]["time_to_n_s"] * 1e6,
+         f"util {eng['async']['train_utilization']:.2f}"),
+        ("async_speedup_time_to_n", 0.0,
+         f"{eng['speedup_time_to_n']:.3f}x"),
+        ("async_staleness_max", 0.0,
+         f"{eng['async']['staleness_max']} (bound {MAX_STALENESS})"),
+        ("async_stale_discards", 0.0, eng["async"]["stale_discards"]),
+        ("async_weight_epochs", 0.0, eng["async"]["weight_epochs_published"]),
+    ])
+
+    if smoke:
+        for backend, r in per_backend.items():
+            a, s = r["async"], r["sync"]
+            assert a["time_to_n_s"] < s["time_to_n_s"], \
+                f"{backend}: async did not beat the sync barrier " \
+                f"({a['time_to_n_s']} vs {s['time_to_n_s']})"
+            assert a["staleness_max"] <= MAX_STALENESS, \
+                f"{backend}: staleness bound violated ({a['staleness_max']})"
+            assert a["stale_discards"] == 0, \
+                f"{backend}: staleness bound forced discards"
+            assert a["consumed"] == n_updates * gpu * gsz, \
+                f"{backend}: consumed {a['consumed']} trajectories, " \
+                f"expected {n_updates * gpu * gsz}"
+            assert a["weight_epochs_published"] == n_updates - 1, \
+                f"{backend}: expected {n_updates - 1} in-flight syncs"
+        # decision parity: the async plane is backend-independent — identical
+        # update timeline and identical per-trajectory weight-epoch stamps
+        assert (per_backend["engine"]["async"]["time_to_updates_s"]
+                == per_backend["sim"]["async"]["time_to_updates_s"]), \
+            "sim/engine async update timelines diverged"
+        assert per_backend["engine"]["_stamps"] == per_backend["sim"]["_stamps"], \
+            "sim/engine weight-epoch stamps diverged"
+        san = results["sanitizer"]
+        assert san["runs"] == 2 * (n_updates + 1) and san["violations"] == 0, \
+            f"trace sanitizer reported violations on the async plane: {san}"
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shape + assert async strictly beats sync, "
+                         "staleness bound holds with zero discards, and the "
+                         "sim/engine stamp maps are bit-identical (CI)")
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--json", default="BENCH_async.json")
+    args = ap.parse_args(argv)
+    emit([], header=True)
+    run(smoke=args.smoke, seed=args.seed, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

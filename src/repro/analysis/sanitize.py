@@ -21,7 +21,13 @@ default in the parity tests and every bench ``--smoke`` — it validates:
   once committed (``migrate_done``) or aborted (checkpoint ``recover`` after
   the destination died); nothing is left on the wire at drain;
 * **tenancy legality** — gold (tier-0) and non-sheddable trajectories are
-  never shed; only non-gold work is degraded.
+  never shed; only non-gold work is degraded;
+* **weight-epoch discipline** (async rollout-as-a-service) — a trajectory's
+  ``weight_epoch`` stamp never changes mid-flight (a resident finishes on the
+  policy that admitted it), each worker's applied epoch is strictly monotone,
+  a sync only ever lands on an alive worker with zero resident lanes (the
+  drain fence held), and a harvest fires exactly once, only after the
+  trajectory finished.
 
 Violations accumulate (capped) and :meth:`finalize` raises
 :class:`TraceViolationError` listing them; ``report()`` returns counters plus
@@ -55,9 +61,9 @@ class TraceSanitizer:
 
     def __init__(self, trajectories, n_workers: int, max_active: int):
         self.max_active = max_active
-        self.tenancy = {t.traj_id: (bool(getattr(t, "sheddable", True)),
-                                    int(getattr(t, "tenant_tier", 0)))
-                        for t in trajectories}
+        self.tenancy: dict[int, tuple[bool, int]] = {}
+        self._trajs: dict[int, object] = {}
+        self.register(trajectories)
         self.now = 0.0
         self.alive = [True] * n_workers
         self.active: list[set[int]] = [set() for _ in range(n_workers)]
@@ -71,9 +77,22 @@ class TraceSanitizer:
         self.migrate_launches = 0
         self.migrate_commits = 0
         self.migrate_aborts = 0
+        # async service plane: weight-epoch discipline + harvest bookkeeping
+        self.worker_epoch = [0] * n_workers  # applied epoch, strictly monotone
+        self.lane_epoch: dict[int, int] = {}  # tid -> stamp at first dispatch
+        self.resident_of: dict[int, int] = {}  # tid -> admitting worker (serving)
+        self.harvested: set[int] = set()
+        self.weight_syncs = 0
         self.wall_s = 0.0
         self._violations: list[str] = []
         self._total_violations = 0
+
+    def register(self, trajectories) -> None:
+        """Adopt trajectories, including mid-run submissions (``inject``)."""
+        for t in trajectories:
+            self.tenancy[t.traj_id] = (bool(getattr(t, "sheddable", True)),
+                                       int(getattr(t, "tenant_tier", 0)))
+            self._trajs[t.traj_id] = t
 
     # ------------------------------------------------------------ plumbing
     def _flag(self, msg: str) -> None:
@@ -140,6 +159,20 @@ class TraceSanitizer:
                        f"dispatching trajectory {tid} (slot conservation)")
         self.active[wid].add(tid)
         self.where[tid] = wid
+        self._check_epoch(tid)
+
+    def _check_epoch(self, tid: int) -> None:
+        """Stamp immutability: a resident finishes on the policy that admitted
+        it — its ``weight_epoch`` must never change while the lane lives."""
+        traj = self._trajs.get(tid)
+        if traj is None:
+            return
+        epoch = int(getattr(traj, "weight_epoch", 0))
+        first = self.lane_epoch.setdefault(tid, epoch)
+        if epoch != first:
+            self._flag(f"trajectory {tid} weight epoch changed mid-flight "
+                       f"({first} -> {epoch}): residents must finish on the "
+                       f"policy that admitted them")
 
     def _on_preempt(self, tid: int, wid: int) -> None:
         if self.where.get(tid) != wid:
@@ -154,10 +187,13 @@ class TraceSanitizer:
                        f"but it is active on {self.where.get(tid)}")
         self.active[wid].discard(tid)
         self.where.pop(tid, None)
+        self._check_epoch(tid)
 
     def _on_finish(self, tid: int, wid: int) -> None:
         if self._not_terminal(tid, "finish"):
             self.finished.add(tid)
+        self._check_epoch(tid)
+        self.resident_of.pop(tid, None)
 
     def _on_tool_done(self, tid: int, wid: int) -> None:
         self._not_terminal(tid, "tool completion")
@@ -175,6 +211,8 @@ class TraceSanitizer:
                        f"one is on the wire to {self.pending_migration[tid]}")
         self._not_terminal(tid, "migration launch")
         self.pending_migration[tid] = dst
+        if tid in self.resident_of:  # residency rebinds to dst at launch
+            self.resident_of[tid] = dst
         self.migrate_launches += 1
 
     def _on_migrate_done(self, tid: int, dst: int) -> None:
@@ -201,6 +239,8 @@ class TraceSanitizer:
         if self.pending_migration.pop(tid, None) is not None:
             # in-flight transfer to a worker that died: the recovery aborts it
             self.migrate_aborts += 1
+        if tid in self.resident_of:
+            self.resident_of[tid] = dst
         self.pending_restore[tid] = dst  # re-route overwrites: token superseded
 
     def _on_restore_done(self, tid: int, wid: int) -> None:
@@ -234,6 +274,8 @@ class TraceSanitizer:
         if 0 <= wid < len(self.alive) and not self.alive[wid]:
             self._flag(f"trajectory {tid} admitted onto dead worker {wid}")
         self._not_terminal(tid, "admission")
+        if 0 <= wid < len(self.alive):
+            self.resident_of[tid] = wid
 
     def _on_defer(self, tid: int, wid: int) -> None:
         self._not_terminal(tid, "deferral")
@@ -250,6 +292,33 @@ class TraceSanitizer:
                        f"worker {self.where[tid]} (only queued work sheds)")
         if self._not_terminal(tid, "shed"):
             self.shed.add(tid)
+        self.resident_of.pop(tid, None)
+
+    def _on_harvest(self, tid: int, wid: int) -> None:
+        if tid not in self.finished:
+            self._flag(f"harvest of trajectory {tid} before it finished "
+                       f"(the consumer would train on a partial episode)")
+        if tid in self.harvested:
+            self._flag(f"trajectory {tid} harvested twice (duplicate sample)")
+        self.harvested.add(tid)
+
+    def _on_weight_sync(self, epoch: int, wid: int) -> None:
+        """The note's tid slot carries the applied epoch, not a trajectory."""
+        if not self.alive[wid]:
+            self._flag(f"weight sync applied to dead worker {wid}")
+        if self.active[wid]:
+            self._flag(f"weight sync on worker {wid} with steps in progress "
+                       f"{sorted(self.active[wid])}: the drain fence leaked")
+        held = sorted(t for t, w in self.resident_of.items() if w == wid)
+        if held:
+            self._flag(f"weight sync on worker {wid} holding resident "
+                       f"trajectories {held}: the drain fence leaked")
+        if epoch <= self.worker_epoch[wid]:
+            self._flag(f"worker {wid} applied weight epoch went backwards "
+                       f"({self.worker_epoch[wid]} -> {epoch}): applied "
+                       f"epochs must be strictly monotone")
+        self.worker_epoch[wid] = epoch
+        self.weight_syncs += 1
 
     def _on_degrade(self, tid: int, wid: int) -> None:
         _, tier = self.tenancy.get(tid, (True, 0))
@@ -275,6 +344,8 @@ class TraceSanitizer:
         "defer": _on_defer,
         "shed": _on_shed,
         "degrade": _on_degrade,
+        "harvest": _on_harvest,
+        "weight_sync": _on_weight_sync,
     }
 
     # ------------------------------------------------------------ teardown
@@ -306,6 +377,8 @@ class TraceSanitizer:
                 "committed": self.migrate_commits,
                 "aborted": self.migrate_aborts,
             },
+            "harvests": len(self.harvested),
+            "weight_syncs": self.weight_syncs,
             "wall_s": self.wall_s,
         }
 

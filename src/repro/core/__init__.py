@@ -15,7 +15,13 @@
                       pluggable ExecutionBackend (engine.backends: the analytic
                       SimBackend and the real-worker EngineBackend), so every
                       scheduling/preemption/migration decision is made by
-                      exactly one code path on either substrate
+                      exactly one code path on either substrate.  Runs closed
+                      loop (whole batch at t=0, barrier on makespan) or open
+                      loop (arrival events, admission, shedding), and under
+                      ``stream_harvest`` yields each FINISHED trajectory the
+                      moment it completes — the streaming mode the async
+                      training plane (rl.service.RolloutService, in-flight
+                      weight syncs, docs/training.md) is built on
 """
 
 from repro.core.faults import (FaultPlan, RetryPolicy, ToolCallTrace,

@@ -30,6 +30,15 @@ workload.  All policy hooks flow through ``HeddleController`` exactly once:
 ``initial_placement``, ``on_step_complete`` (progressive refresh + migration
 emission), ``commit_migration``/``abort_migration``, ``on_finish``,
 ``record_worker_stats``.
+
+The loop also carries the asynchronous rollout-as-a-service plane
+(``repro.rl.service``, docs/training.md): with ``stream_harvest`` on,
+``run_stream()`` yields each FINISHED trajectory through a ``harvest`` event
+instead of barriering on the makespan, ``inject()`` admits new work mid-run,
+and ``publish_weights()`` schedules an in-flight weight sync — each worker
+cuts over to the new policy epoch only once its resident lanes drain, so every
+trajectory finishes on the weights that admitted it (the ``weight_epoch``
+stamp, enforced by the sanitizer).
 """
 
 from __future__ import annotations
@@ -157,6 +166,20 @@ class ExecutionBackend(Protocol):
         """Replacement capacity for slot ``wid`` joined (cold cache)."""
         ...
 
+    # ---- in-flight weight sync (async rollout-as-a-service; docs/training.md) ----
+
+    def stage_weights(self, params, epoch: int) -> None:
+        """Publish new policy weights as ``epoch``; staged, not applied — each
+        worker cuts over via ``sync_weights`` once its residents drain.
+        ``params=None`` advances the epoch without new tensors (modeled runs)."""
+        ...
+
+    def sync_weights(self, wid: int, epoch: int) -> None:
+        """Cut worker ``wid`` over to the staged ``epoch``: swap weights in and
+        drop every cached stale-weight prefix (the orchestrator's drain fence
+        guarantees the worker holds no resident lanes at this instant)."""
+        ...
+
 
 @dataclass(frozen=True)
 class OrchestratorConfig:
@@ -170,6 +193,7 @@ class OrchestratorConfig:
     timeline_every: int = 0  # sample (t, live) every N events (0 = off)
     trace: bool = False  # record the (event, traj, worker) decision trace
     sanitize: bool = False  # validate the decision stream (TraceSanitizer)
+    stream_harvest: bool = False  # emit harvest events; run_stream() yields them
 
 
 @dataclass
@@ -260,6 +284,14 @@ class Orchestrator:
         self._checkpointing = faults is not None and bool(faults.deaths)
         self.restoring: dict[int, tuple[int, bool]] = {}  # traj -> (token, resubmit)
         self._xfer_seq = itertools.count()  # staleness tokens for transfers/restores
+        # async service plane: per-worker weight epochs + residency fence
+        self.now = 0.0  # virtual instant of the event being handled
+        self.published_epoch = 0  # latest epoch handed to publish_weights
+        self.weight_epoch = 0  # latest epoch whose sync event has popped
+        self.applied_epoch = [0] * backend.n_workers  # per-worker applied epoch
+        self._resident: list[set[int]] = [set() for _ in range(backend.n_workers)]
+        self._started = False
+        self._result: Optional[OrchestratorResult] = None
         self.preemptions = 0
         self.migrations = 0
         self.worker_deaths = 0
@@ -414,6 +446,10 @@ class Orchestrator:
                 self.controller.on_finish(traj)
             self.backend.release(traj)
             self._note("finish", traj.traj_id, lane.wid)
+            self._unbind(traj.traj_id, now)
+            if self.cfg.stream_harvest:
+                # no makespan barrier: the consumer sees this trajectory now
+                self._push(now, "harvest", traj.traj_id)
             return
         traj.phase = TrajectoryPhase.TOOL_CALL
         if self._checkpointing:
@@ -440,6 +476,7 @@ class Orchestrator:
             or req.traj_id in self.restoring
             or req.src != traj.worker_id  # moved by a checkpoint recovery
             or not self.lanes[req.dst].alive  # destination died since emission
+            or self.applied_epoch[req.dst] != traj.weight_epoch  # policy mismatch
             or not self.backend.can_migrate(traj)
         ):
             # resumed, finished, or already moved: migrating now would stall the
@@ -454,6 +491,10 @@ class Orchestrator:
         self.migrations += 1
         token = next(self._xfer_seq)
         self.in_flight[req.traj_id] = (req.dst, token)
+        # rebind residency to dst now: the destination must not cut weights
+        # over while an epoch-matched lane is on the wire towards it
+        self._unbind(req.traj_id, now)
+        self._resident[req.dst].add(req.traj_id)
         self._push(now + dur, "migration_done", (req.traj_id, token))
         self._note("migrate", req.traj_id, req.dst)
 
@@ -485,11 +526,20 @@ class Orchestrator:
         self._resume(traj, now)
 
     # ------------------------------------------------------------ faults / recovery
-    def _pick_survivor(self) -> int:
-        """Least-loaded alive lane, counting restores already headed there."""
+    def _pick_survivor(self, epoch: int = 0) -> int:
+        """Least-loaded alive lane, counting restores already headed there.
+
+        Lanes whose applied weight epoch matches the recovering trajectory's
+        stamp are preferred (the lane resumes on the policy that started it);
+        when none matches, availability beats purity — the stamp is still
+        never rewritten, so the staleness-bounded consumer sees the truth.
+        """
         alive = [ln for ln in self.lanes if ln.alive]
         if not alive:
             raise RuntimeError("all workers dead: nothing left to recover onto")
+        matching = [ln for ln in alive if self.applied_epoch[ln.wid] == epoch]
+        if matching:
+            alive = matching
         return min(
             alive, key=lambda ln: (len(ln.active) + len(ln.scheduler) + ln.incoming, ln.wid)
         ).wid
@@ -503,10 +553,12 @@ class Orchestrator:
         whose tool call is still outstanding (it resumes via ``tool_done``).
         """
         tid = traj.traj_id
-        dst = self._pick_survivor()
+        dst = self._pick_survivor(traj.weight_epoch)
         if self.controller is not None:  # reads worker_id as src: before reassign
             self.controller.on_recover(traj, dst)
         delay = self.backend.restore(traj, dst)
+        self._unbind(tid, now)
+        self._resident[dst].add(tid)
         traj.worker_id = dst
         traj.recoveries += 1
         self.recoveries += 1
@@ -598,6 +650,8 @@ class Orchestrator:
         if self.controller is not None:
             self.controller.mark_worker_alive(wid)
         self._note("worker_up", -1, wid)
+        # a cold replacement has no residents: adopt the latest policy at once
+        self._try_sync(lane, now)
 
     def _resume(self, traj: Trajectory, now: float) -> None:
         # resuming invalidates any emitted-but-unlaunched migration: its target
@@ -623,6 +677,7 @@ class Orchestrator:
             traj.priority = traj.predicted_total
             traj.worker_id = int(self.routing.initial_worker(traj, self._loads()))
             self.backend.admit([traj], now)
+            self._admit_resident(traj)
             self.admitted += 1
             self._note("admit", tid, traj.worker_id)
             self._submit(traj, now)
@@ -639,6 +694,7 @@ class Orchestrator:
                        "arrival", tid)
             return
         self.backend.admit([traj], now)
+        self._admit_resident(traj)
         self.admitted += 1
         self._note("admit", tid, decision.worker)
         self._submit(traj, now)
@@ -654,6 +710,7 @@ class Orchestrator:
             self.lanes[traj.worker_id].scheduler.remove(traj)
             self._mid_step.discard(tid)
             self.backend.release(traj)
+            self._unbind(tid, now)
         if self.controller is not None:
             self.controller.on_shed(traj, now, reason, admitted)
         traj.shed = True
@@ -694,43 +751,108 @@ class Orchestrator:
                 self._note("degrade", traj.traj_id, traj.worker_id
                            if traj.worker_id is not None else -1)
 
+    # ------------------------------------------------------------ async service plane
+    def _admit_resident(self, traj: Trajectory) -> None:
+        """Stamp the admitting worker's applied weight epoch and bind residency.
+
+        The stamp is written exactly once, here: a resident finishes on the
+        policy that admitted it (sanitizer-enforced), and the staleness-bounded
+        consumer compares this stamp against the latest published epoch.
+        """
+        wid = traj.worker_id
+        traj.weight_epoch = self.applied_epoch[wid]
+        self._resident[wid].add(traj.traj_id)
+
+    def _unbind(self, tid: int, now: float) -> None:
+        """Release ``tid``'s residency; a fully drained lane may cut weights over."""
+        for lane in self.lanes:
+            residents = self._resident[lane.wid]
+            if tid in residents:
+                residents.remove(tid)
+                if not residents:
+                    self._try_sync(lane, now)
+                return
+
+    def _try_sync(self, lane: _WorkerLane, now: float) -> None:
+        """In-flight weight-sync fence: cut worker ``lane`` over to the latest
+        published epoch only when it holds zero resident lanes — never under a
+        running, queued, parked-at-a-tool-boundary or inbound trajectory."""
+        wid = lane.wid
+        if (
+            not lane.alive
+            or self.applied_epoch[wid] >= self.weight_epoch
+            or self._resident[wid]
+        ):
+            return
+        self.backend.sync_weights(wid, self.weight_epoch)
+        self.applied_epoch[wid] = self.weight_epoch
+        self._note("weight_sync", self.weight_epoch, wid)
+
+    def publish_weights(self, params=None, *, at: Optional[float] = None) -> int:
+        """Stage new policy weights and schedule their in-flight sync.
+
+        Returns the new epoch.  ``at`` (virtual time, >= now) models training
+        latency: the epoch only starts cutting workers over once its
+        ``weight_sync`` event pops.  ``params=None`` advances the epoch without
+        new tensors (modeled benches).  Workers adopt the epoch individually as
+        their residents drain; lanes admitted before their worker cut over keep
+        their old stamp, which is exactly what the staleness bound consumes.
+        """
+        self.published_epoch += 1
+        epoch = self.published_epoch
+        self.backend.stage_weights(params, epoch)
+        when = self.now if at is None else max(self.now, at)
+        self._push(when, "weight_sync", (epoch, next(self._xfer_seq)))
+        return epoch
+
+    def _on_weight_sync(self, epoch: int, now: float) -> None:
+        if epoch <= self.weight_epoch:
+            return  # superseded by a later publish that already popped
+        self.weight_epoch = epoch
+        for lane in self.lanes:
+            self._try_sync(lane, now)
+
+    def inject(self, trajectories: Sequence[Trajectory]) -> None:
+        """Mid-run submission (rollout-as-a-service): new work enters the
+        open-loop front door at the current virtual instant."""
+        if not self.cfg.open_loop:
+            raise ValueError("inject() needs open_loop mode (the service plane)")
+        if not self._started:
+            raise RuntimeError("inject() before run(): pass initial work instead")
+        for t in trajectories:
+            if t.traj_id in self.by_id:
+                raise ValueError(f"trajectory {t.traj_id} already submitted")
+            t.submit_time = self.now
+            self.trajs.append(t)
+            self.by_id[t.traj_id] = t
+            self._push(self.now, "arrival", t.traj_id)
+        if self._sanitizer is not None:
+            self._sanitizer.register(trajectories)
+
     # ------------------------------------------------------------ run
     def run(self) -> OrchestratorResult:
-        if self.cfg.open_loop:
-            # serving: trajectories arrive over time (submit_time stamped by an
-            # ArrivalPolicy); placement and admission happen per arrival
-            if self.controller is not None:
-                self.controller.begin_serving(self.cfg.max_active)
-            for t in self.trajs:
-                self._push(t.submit_time, "arrival", t.traj_id)
-        else:
-            for t in self.trajs:
-                t.predicted_remaining = self.predictor.predict(t)
-                t.priority = t.predicted_total
-                t.submit_time = 0.0
-            if self.routing is not None:
-                loads = np.zeros(len(self.lanes))
-                for t in self.trajs:
-                    t.worker_id = int(self.routing.initial_worker(t, loads))
-                    loads[t.worker_id] += 1
-            else:
-                self.controller.initial_placement(self.trajs)
-            self.backend.admit(self.trajs)
-            for t in self.trajs:
-                self._submit(t, 0.0)
-        if self.faults is not None:
-            # the chaos schedule rides the same versioned heap as everything else
-            for t, wid in self.faults.deaths:
-                self._push(t, "worker_death", wid)
-            for t, wid in self.faults.revivals:
-                self._push(t, "worker_up", wid)
+        """Execute to completion (the synchronous barrier view of run_stream)."""
+        for _ in self.run_stream():
+            pass
+        return self._result
 
-        now = 0.0
+    def run_stream(self):
+        """Drive the event loop, yielding each harvested trajectory.
+
+        Harvest events only exist under ``cfg.stream_harvest``; without it the
+        generator yields nothing and ``run()`` degenerates to the classic
+        barrier.  Between yields the consumer may ``inject()`` new work and
+        ``publish_weights()`` — the service plane's whole API.  When the heap
+        drains, the final :class:`OrchestratorResult` lands in ``self._result``.
+        """
+        self._begin()
         while self._evq:
             self.events += 1
             if self.events > self.cfg.max_events:
                 raise RuntimeError("orchestrator event budget exceeded")
             now, _, kind, payload = heapq.heappop(self._evq)
+            self.now = now
+            harvested: Optional[Trajectory] = None
             if self._sanitizer is not None:
                 self._sanitizer.on_clock(now)
             if kind == "worker":
@@ -757,9 +879,52 @@ class Orchestrator:
                 self._on_worker_death(payload, now)
             elif kind == "worker_up":
                 self._on_worker_up(payload, now)
+            elif kind == "harvest":
+                harvested = self.by_id[payload]
+                self._note("harvest", payload, harvested.worker_id)
+            elif kind == "weight_sync":
+                epoch, _sync_token = payload
+                self._on_weight_sync(epoch, now)
             if self.cfg.timeline_every and self.events % self.cfg.timeline_every == 0:
                 self.timeline.append((now, sum(1 for t in self.trajs if not t.finished)))
+            if harvested is not None:
+                yield harvested
+        self._result = self._finalize()
 
+    def _begin(self) -> None:
+        """Seed the heap: the t=0 batch (closed loop) or the arrival process."""
+        self._started = True
+        if self.cfg.open_loop:
+            # serving: trajectories arrive over time (submit_time stamped by an
+            # ArrivalPolicy); placement and admission happen per arrival
+            if self.controller is not None:
+                self.controller.begin_serving(self.cfg.max_active)
+            for t in self.trajs:
+                self._push(t.submit_time, "arrival", t.traj_id)
+        else:
+            for t in self.trajs:
+                t.predicted_remaining = self.predictor.predict(t)
+                t.priority = t.predicted_total
+                t.submit_time = 0.0
+            if self.routing is not None:
+                loads = np.zeros(len(self.lanes))
+                for t in self.trajs:
+                    t.worker_id = int(self.routing.initial_worker(t, loads))
+                    loads[t.worker_id] += 1
+            else:
+                self.controller.initial_placement(self.trajs)
+            self.backend.admit(self.trajs)
+            for t in self.trajs:
+                self._admit_resident(t)
+                self._submit(t, 0.0)
+        if self.faults is not None:
+            # the chaos schedule rides the same versioned heap as everything else
+            for t, wid in self.faults.deaths:
+                self._push(t, "worker_death", wid)
+            for t, wid in self.faults.revivals:
+                self._push(t, "worker_up", wid)
+
+    def _finalize(self) -> OrchestratorResult:
         unfinished = [t.traj_id for t in self.trajs if not t.finished and not t.shed]
         assert not unfinished, f"orchestrator drained with live trajectories {unfinished}"
         # balance checks + raise on any accumulated invariant violation
@@ -768,7 +933,7 @@ class Orchestrator:
         )
         delays = np.asarray([s.queue_delay for t in self.trajs for s in t.steps])
         return OrchestratorResult(
-            makespan=max(t.finish_time for t in self.trajs),
+            makespan=max((t.finish_time for t in self.trajs), default=0.0),
             preemptions=self.preemptions,
             migrations=self.migrations,
             queue_delay_mean=float(delays.mean()) if len(delays) else 0.0,

@@ -173,6 +173,7 @@ class SimBackend:
         self.cache_home: dict[int, set[int]] = {}  # traj -> workers with its cache
         self.prompt_home: dict[int, set[int]] = {}  # prompt -> workers with its prompt
         self.miss_tokens = 0
+        self.staged_epoch = 0  # latest weight epoch published to the fleet
         self._gen_time: dict[int, float] = {}
 
     @property
@@ -358,6 +359,24 @@ class SimBackend:
     def revive(self, wid: int) -> None:
         pass  # kill() already cleared the state; replacement capacity joins cold
 
+    # ------------------------------------------------------------ weight sync
+    def stage_weights(self, params, epoch: int) -> None:
+        """The analytic twin holds no tensors: staging records the epoch only
+        (the orchestrator's drain fence decides when each worker cuts over)."""
+        del params
+        self.staged_epoch = epoch
+
+    def sync_weights(self, wid: int, epoch: int) -> None:
+        """Cut worker ``wid`` over to ``epoch``: drop its cache/prompt homes so
+        no stale-weight prefix ever serves a post-sync admission — the analytic
+        twin of the engine's ``reset_cache()``.  Zero residents guaranteed by
+        the fence, so no cost model state needs settling."""
+        del epoch
+        for homes in self.cache_home.values():
+            homes.discard(wid)
+        for homes in self.prompt_home.values():
+            homes.discard(wid)
+
 
 # ---------------------------------------------------------------- engine backend
 
@@ -439,6 +458,9 @@ class EngineBackend:
         # tool output absorbed since the last checkpoint: a boundary snapshot
         # pre-dates the absorb, so a restore must replay it into the lane
         self.last_absorb: dict[int, list[int]] = {}
+        # in-flight weight sync: staged params by epoch, applied per worker as
+        # the orchestrator's drain fence releases each one
+        self._staged_params: dict[int, object] = {}
 
     @property
     def n_workers(self) -> int:
@@ -661,3 +683,26 @@ class EngineBackend:
         """Replacement capacity joins in slot ``wid``: cold cache, same engine
         shell (kill() already dropped every lane and radix ref)."""
         self.dead.discard(wid)
+
+    # ------------------------------------------------------------ weight sync
+    def stage_weights(self, params, epoch: int) -> None:
+        """Publish new policy weights as ``epoch``: staged host-side, applied
+        per worker by ``sync_weights`` once the orchestrator's drain fence
+        clears it.  ``params=None`` advances the epoch without new tensors
+        (modeled trainers exercising only the control plane)."""
+        self._staged_params[epoch] = params
+
+    def sync_weights(self, wid: int, epoch: int) -> None:
+        """Cut worker ``wid`` over to ``epoch``: swap the staged params in and
+        ``reset_cache()`` — every retired prefix lane decoded under the old
+        policy must never seed a post-sync admission.  The fence guarantees the
+        worker holds zero resident lanes, so nothing live is destroyed."""
+        params = self._staged_params.get(epoch)
+        view = self.views[wid]
+        if params is not None:
+            view.engine.params = params
+        # the global target epoch is monotone: once any worker syncs to
+        # ``epoch``, no future sync will ask for an older stage
+        for stale in [e for e in self._staged_params if e < epoch]:
+            del self._staged_params[stale]
+        view.engine.reset_cache()

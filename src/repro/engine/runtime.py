@@ -346,6 +346,40 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
                           faults=faults)
 
 
+def make_sim_components(predictor, n_workers: int = 2,
+                        config: RuntimeConfig = RuntimeConfig(), *,
+                        fleet: FleetSpec | None = None,
+                        migration_load_gap: int = 1,
+                        migration_cooldown_steps: int = 1,
+                        rank_hysteresis: float = 0.2,
+                        prompt_lens: dict[int, int] | None = None,
+                        faults: FaultPlan | None = None,
+                        retry: RetryPolicy = RetryPolicy(),
+                        serving: ServingConfig | None = None):
+    """Controller + engine-parity ``SimBackend`` pair — ``run_on_sim``'s wiring,
+    reusable by anything that drives the orchestrator itself (the streaming
+    service plane builds on this).  Returns ``(backend, controller)``.
+    """
+    spec = fleet if fleet is not None else FleetSpec.homogeneous(n_workers)
+    controller = _make_controller(predictor, config, spec,
+                                  migration_load_gap=migration_load_gap,
+                                  migration_cooldown_steps=migration_cooldown_steps,
+                                  rank_hysteresis=rank_hysteresis,
+                                  serving=serving)
+    controller.degrees = list(spec.degrees)
+    lat = controller.latency
+    token_times = [config.token_time * lat.base_token_time(mp)
+                   / lat.base_token_time(1) for mp in spec.degrees]
+    backend = SimBackend(
+        list(spec.degrees), token_times, controller.interference,
+        prefill_speedup=config.prefill_speedup,
+        link_bandwidth=config.link_bandwidth,
+        latency_scale=config.tool_latency_scale,
+        quantum=config.quantum, prompt_lens=prompt_lens,
+        faults=faults, retry=retry)
+    return backend, controller
+
+
 def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
                config: RuntimeConfig = RuntimeConfig(), *,
                fleet: FleetSpec | None = None, migration_load_gap: int = 1,
@@ -365,23 +399,12 @@ def run_on_sim(batch: list[Trajectory], predictor, n_workers: int = 2,
     asserts and ``benchmarks/bench_rollout.py --backend sim`` exploits for
     model-free policy sweeps.
     """
-    spec = fleet if fleet is not None else FleetSpec.homogeneous(n_workers)
-    controller = _make_controller(predictor, config, spec,
-                                  migration_load_gap=migration_load_gap,
-                                  migration_cooldown_steps=migration_cooldown_steps,
-                                  rank_hysteresis=rank_hysteresis,
-                                  serving=serving)
-    controller.degrees = list(spec.degrees)
-    lat = controller.latency
-    token_times = [config.token_time * lat.base_token_time(mp)
-                   / lat.base_token_time(1) for mp in spec.degrees]
-    backend = SimBackend(
-        list(spec.degrees), token_times, controller.interference,
-        prefill_speedup=config.prefill_speedup,
-        link_bandwidth=config.link_bandwidth,
-        latency_scale=config.tool_latency_scale,
-        quantum=config.quantum, prompt_lens=prompt_lens,
-        faults=faults, retry=retry)
+    backend, controller = make_sim_components(
+        predictor, n_workers, config, fleet=fleet,
+        migration_load_gap=migration_load_gap,
+        migration_cooldown_steps=migration_cooldown_steps,
+        rank_hysteresis=rank_hysteresis, prompt_lens=prompt_lens,
+        faults=faults, retry=retry, serving=serving)
     orch = Orchestrator(
         backend, batch,
         OrchestratorConfig(scheduler=config.scheduler, migration=config.migration,

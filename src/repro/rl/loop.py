@@ -1,22 +1,31 @@
 """End-to-end agentic RL training loop: Heddle-orchestrated rollout + GRPO updates.
 
-One training step (paper §2.2):
-  1. rollout — groups of trajectories per prompt, executed on real RolloutWorkers
-     with tool calls in the loop, driven by the unified orchestration stack
-     (``core.orchestrator`` + ``engine.backends.EngineBackend`` via
-     ``RolloutRuntime``): per-worker PPS queues, preemptive execution,
-     progressive prediction refresh, prefix-affine placement and tool-interval
-     migration — the same control plane the serving path runs, not a side-car
-     loop;
-  2. inference — old-policy logprobs over the collected trajectories;
-  3. training — GRPO update on the policy.
+Two rollout planes feed the same GRPO update (paper §2.2):
 
-The rollout→predictor feedback loop is closed the way the paper harvests
-history: each iteration's finished trajectories are appended to a bounded
-history and the ``ProgressivePredictor`` is refit on it, so scheduler
-priorities sharpen as training progresses (cold start uses a budget prior).
-Weight sync stays explicit: every rollout republishes ``self.params`` to the
-workers and ``reset_cache()`` drops stale-weight KV before admission.
+* **synchronous** (:meth:`HeddleTrainer.train` → :meth:`HeddleTrainer.rollout`)
+  — groups of trajectories per prompt, executed on real RolloutWorkers with
+  tool calls in the loop, driven by the unified orchestration stack
+  (``core.orchestrator`` + ``engine.backends.EngineBackend`` via
+  ``RolloutRuntime``): per-worker PPS queues, preemptive execution,
+  progressive prediction refresh, prefix-affine placement and tool-interval
+  migration — the same control plane the serving path runs, not a side-car
+  loop.  Each iteration barriers on the batch makespan; weight sync is a
+  bulk republish (``w.params = self.params`` + ``reset_cache()``) between
+  iterations.
+* **asynchronous** (:meth:`HeddleTrainer.train_async`, docs/training.md) —
+  a persistent :class:`~repro.rl.service.RolloutService` streams FINISHED
+  trajectories into a bounded :class:`~repro.rl.service.ReplayBuffer` while
+  the tail is still decoding; GRPO consumes partial batches of complete,
+  at-most-``max_staleness``-epochs-old groups, and each update publishes an
+  *in-flight* weight sync — workers cut over individually once their
+  resident lanes drain, so every trajectory finishes on the policy that
+  admitted it (the ``Trajectory.weight_epoch`` stamp).
+
+Both planes share inference (old-policy logprobs) and the GRPO train step,
+and both close the rollout→predictor feedback loop the way the paper harvests
+history: finished trajectories are appended to a bounded history and the
+``ProgressivePredictor`` is refit on it, so scheduler priorities sharpen as
+training progresses (cold start uses a budget prior).
 """
 
 from __future__ import annotations
@@ -113,6 +122,11 @@ class TaskEnvironment(ToolEnvironment):
         self.max_seq = max_seq
         self.records: dict[int, RolloutRecord] = {}
 
+    def add_task(self, tid: int, task: D.MathTask, prompt_len: int) -> None:
+        """Register a task mid-run (the async service injects work as it goes)."""
+        self.tasks[tid] = task
+        self.prompt_lens[tid] = prompt_len
+
     def step_outcome(
         self, traj: Trajectory, step: int, gen_tokens: list[int], context: list[int]
     ) -> ToolResult:
@@ -186,6 +200,7 @@ class HeddleTrainer:
         # outcomes, so drawing them from the process-global counter would make
         # rollout behavior depend on whatever else ran in this process
         self._tid_base = 0
+        self._pid_base = 0  # async plane: prompt ids unique across a service run
         self.last_rollout: RuntimeResult | None = None
         self.step_count = 0
 
@@ -296,4 +311,128 @@ class HeddleTrainer:
             records = self.rollout(tasks)
             metrics = self.update(records)
             history.append(metrics)
+        return history
+
+    # ------------------------------------------------------------------ async
+    def _spawn_group(
+        self, task: D.MathTask, env: TaskEnvironment
+    ) -> tuple[list[Trajectory], dict[int, list[int]]]:
+        """One GRPO group for ``task``: fresh trajectory + prompt ids, the task
+        registered with the persistent environment."""
+        tcfg = self.tcfg
+        pid = self._pid_base
+        self._pid_base += 1
+        ptoks = task.prompt_tokens()
+        group: list[Trajectory] = []
+        prompts: dict[int, list[int]] = {}
+        for g in range(tcfg.group_size):
+            t = Trajectory(
+                traj_id=self._tid_base,
+                prompt_id=pid,
+                sample_id=g,
+                prompt_tokens=len(ptoks),
+                context_tokens=len(ptoks),
+            )
+            self._tid_base += 1
+            group.append(t)
+            prompts[t.traj_id] = list(ptoks)
+            env.add_task(t.traj_id, task, len(ptoks))
+        return group, prompts
+
+    def train_async(
+        self,
+        n_updates: int,
+        *,
+        groups_per_update: int = 2,
+        max_staleness: int = 1,
+        backlog_groups: int = 4,
+        replay_capacity: int = 64,
+        seed: int = 0,
+    ) -> list[dict]:
+        """Asynchronous training: rollout-as-a-service + staleness-bounded GRPO.
+
+        One persistent fleet streams finished trajectories while the tail is
+        still decoding; an update fires as soon as at least one complete,
+        fresh-enough group is buffered (a *partial* batch of up to
+        ``groups_per_update`` groups), then publishes an in-flight weight sync
+        and submits replacement groups to keep the backlog fed.  No update
+        ever consumes a trajectory more than ``max_staleness`` epochs older
+        than the latest published weights — stale groups are discarded by the
+        replay buffer, not trained on.  Returns per-update metrics
+        (``staleness``, ``groups_consumed``, ``weight_epoch`` included).
+        """
+        from repro.rl.service import ReplayBuffer, RolloutService
+
+        tcfg = self.tcfg
+        self.last_rollout = None  # sync-plane telemetry must not leak in
+        for w in self.workers:
+            w.params = self.params  # epoch-0 policy, cold caches
+            w.reset_cache()
+        env = TaskEnvironment(
+            {},
+            {},
+            max_steps=tcfg.max_steps_per_traj,
+            max_seq=tcfg.max_seq,
+            seed=tcfg.seed,
+        )
+        rcfg = RuntimeConfig(
+            scheduler=tcfg.scheduler,
+            migration=tcfg.migration,
+            max_active=tcfg.max_active,
+            quantum=tcfg.quantum,
+            token_time=tcfg.token_time,
+            seed=tcfg.seed,
+        )
+        spawned = 0
+        trajs: list[Trajectory] = []
+        prompts: dict[int, list[int]] = {}
+        for _ in range(backlog_groups):
+            task = D.sample_tasks(1, seed=seed + 10_000 + spawned)[0]
+            spawned += 1
+            group, p = self._spawn_group(task, env)
+            trajs.extend(group)
+            prompts.update(p)
+        # RolloutRuntime wires the engine backend (pricing, env, prompts) the
+        # one sanctioned way; the service then drives the orchestrator itself
+        runtime = RolloutRuntime(
+            self.workers,
+            self.controller,
+            trajs,
+            env,
+            rcfg,
+            prompts=prompts,
+            stop_token=D.EOS,
+            step_budget=lambda t: tcfg.gen_tokens_per_step,
+        )
+        svc = RolloutService(runtime.backend, self.controller, rcfg)
+        svc.submit(trajs)
+        buffer = ReplayBuffer(replay_capacity, tcfg.group_size)
+        history: list[dict] = []
+        for traj in svc.stream():
+            buffer.add(traj)
+            if len(history) >= n_updates:
+                continue  # target reached: drain the stragglers untrained
+            groups = buffer.take(
+                groups_per_update, epoch=svc.epoch, max_staleness=max_staleness
+            )
+            if not groups:
+                continue
+            records = [env.records[t.traj_id] for g in groups for t in g]
+            staleness = max(
+                svc.epoch - t.weight_epoch for g in groups for t in g
+            )
+            metrics = self.update(records)
+            metrics["groups_consumed"] = float(len(groups))
+            metrics["staleness"] = float(staleness)
+            history.append(metrics)
+            if len(history) < n_updates:
+                # in-flight sync: residents finish on their admitted policy
+                metrics["weight_epoch"] = float(svc.sync_weights(self.params))
+                for _ in range(len(groups)):  # keep the backlog fed
+                    task = D.sample_tasks(1, seed=seed + 10_000 + spawned)[0]
+                    spawned += 1
+                    group, p = self._spawn_group(task, env)
+                    svc.submit(group, p)
+        res = svc.close()
+        self._refit_predictor(res.trajectories)
         return history

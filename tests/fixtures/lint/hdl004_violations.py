@@ -25,3 +25,28 @@ class MiniLoop:
                 pass
             elif kind == "ghost":                           # line 26: never pushed
                 pass
+
+
+class ServiceLoop:
+    """Async service plane: harvest/weight_sync kinds must obey the rule."""
+
+    def __init__(self):
+        self.heap = []
+        self.epoch = 0
+        self.sync_seq = 0
+
+    def publish(self, t, wid):
+        self._push(t, "harvest", wid)                       # fine: scalar
+        self._push(t, "weight_sync", (self.epoch, wid))     # line 40: unstamped
+        self.sync_seq += 1
+        self._push(t, "weight_sync", (self.epoch, self.sync_seq))  # fine
+
+    def _push(self, t, kind, payload):
+        self.heap.append((t, kind, payload))
+
+    def run(self):
+        for t, kind, payload in self.heap:
+            if kind == "harvest":
+                pass
+            elif kind == "weight_sync":
+                pass

@@ -71,6 +71,7 @@ def test_hdl004_event_kind_drift_exact_lines():
         ("HDL004", 14),   # pushed kind with no handler
         ("HDL004", 15),   # tuple payload without version stamp
         ("HDL004", 26),   # handler branch for a never-pushed kind
+        ("HDL004", 40),   # weight_sync tuple without an epoch/seq stamp
     ]
 
 

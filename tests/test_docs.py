@@ -1,0 +1,91 @@
+"""The docs front door stays navigable: links resolve, anchors exist.
+
+Runs ``tools/check_doc_links.py`` against the real repo (the gate CI
+enforces) and against synthetic fixtures that pin what the checker catches —
+a checker that passes everything would let the docs rot silently.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "check_doc_links", REPO / "tools" / "check_doc_links.py"
+)
+_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_mod)
+
+
+def test_repo_docs_have_no_broken_links_or_anchors(capsys):
+    assert _mod.main(["check_doc_links", str(REPO)]) == 0
+
+
+def test_readme_and_training_doc_exist_and_are_linked():
+    readme = (REPO / "README.md").read_text()
+    assert "docs/training.md" in readme
+    assert "BENCH_async.json" in readme  # bench table covers the async artifact
+    for doc in sorted((REPO / "docs").glob("*.md")):
+        assert f"docs/{doc.name}" in readme, f"README must map {doc.name}"
+
+
+def _run(root: Path) -> int:
+    return _mod.main(["check_doc_links", str(root)])
+
+
+def _mkrepo(tmp_path: Path, readme: str, docs: dict[str, str]) -> Path:
+    (tmp_path / "README.md").write_text(readme)
+    (tmp_path / "docs").mkdir()
+    for name, text in docs.items():
+        (tmp_path / "docs" / name).write_text(text)
+    return tmp_path
+
+
+def test_checker_flags_missing_file_and_bad_anchor(tmp_path, capsys):
+    _mkrepo(
+        tmp_path,
+        "[gone](docs/nope.md) and [bad](docs/a.md#no-such-heading)\n",
+        {"a.md": "# Real Heading\n"},
+    )
+    assert _run(tmp_path) == 1
+    err = capsys.readouterr().err
+    assert "broken link" in err and "broken anchor" in err
+
+
+def test_checker_accepts_github_style_anchors(tmp_path):
+    _mkrepo(
+        tmp_path,
+        "[ok](docs/a.md#two-clocks-one-data-plane-enginebackend)\n"
+        "[dup](docs/a.md#setup-1)\n",
+        {"a.md": "# Two clocks, one data plane (EngineBackend)\n\n## Setup\n\n## Setup\n"},
+    )
+    assert _run(tmp_path) == 0
+
+
+def test_checker_ignores_code_blocks_and_external_links(tmp_path):
+    _mkrepo(
+        tmp_path,
+        "[x](https://example.com) `[y](docs/fake.md)`\n\n"
+        "```\n[z](docs/also_fake.md)\n```\n",
+        {"a.md": "# A\n"},
+    )
+    assert _run(tmp_path) == 0
+
+
+def test_checker_rejects_links_escaping_the_repo(tmp_path, capsys):
+    _mkrepo(tmp_path, "[out](../../etc/passwd)\n", {"a.md": "# A\n"})
+    assert _run(tmp_path) == 1
+    assert "escapes the repo" in capsys.readouterr().err
+
+
+def test_checker_runs_as_a_script():
+    import subprocess
+
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_doc_links.py"), str(REPO)],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "0 problems" in proc.stdout

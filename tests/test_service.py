@@ -1,0 +1,348 @@
+"""Async rollout-as-a-service plane: replay-buffer discipline, the staleness
+bound as a hard property, weight-epoch stamping parity across backends (under
+chaos), sanitizer invariants for the new event kinds, and the async trainer."""
+
+import copy
+import math
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.trajectory import Trajectory
+from repro.engine.runtime import (RuntimeConfig, build_workbench, make_runtime,
+                                  make_sim_components, synth_prompts)
+from repro.models import model as M
+from repro.rl.service import ReplayBuffer, RolloutService
+
+SEED = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm_135m").reduced(n_periods=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _traj(pid: int, sid: int, epoch: int = 0) -> Trajectory:
+    t = Trajectory(prompt_id=pid, sample_id=sid, prompt_tokens=4,
+                   context_tokens=4)
+    t.weight_epoch = epoch
+    return t
+
+
+# ------------------------------------------------------------- replay buffer
+
+def test_replay_buffer_group_ready_only_when_complete():
+    """GRPO advantages normalize within a group — a partial group must never
+    be consumable."""
+    buf = ReplayBuffer(capacity=64, group_size=2)
+    buf.add(_traj(0, 0))
+    assert buf.ready_groups == 0
+    assert buf.take(1, epoch=0, max_staleness=0) == []
+    buf.add(_traj(0, 1))
+    assert buf.ready_groups == 1
+    (group,) = buf.take(1, epoch=0, max_staleness=0)
+    assert [t.prompt_id for t in group] == [0, 0]
+    assert len(buf) == 0 and buf.ready_groups == 0
+
+
+def test_replay_buffer_takes_groups_in_completion_order():
+    buf = ReplayBuffer(capacity=64, group_size=2)
+    buf.add(_traj(0, 0))
+    buf.add(_traj(1, 0))
+    buf.add(_traj(1, 1))           # group 1 completes first
+    buf.add(_traj(0, 1))
+    (first,) = buf.take(1, epoch=0, max_staleness=0)
+    assert first[0].prompt_id == 1
+    (second,) = buf.take(1, epoch=0, max_staleness=0)
+    assert second[0].prompt_id == 0
+
+
+def test_replay_buffer_staleness_discards_the_whole_group():
+    """Freshness is per trajectory: one over-age sibling poisons the group
+    (its advantages would mix policies beyond the bound), so the whole group
+    is discarded and counted — never partially consumed."""
+    buf = ReplayBuffer(capacity=64, group_size=2)
+    buf.add(_traj(0, 0, epoch=0))  # 3 epochs old at take time
+    buf.add(_traj(0, 1, epoch=2))  # fresh
+    buf.add(_traj(1, 0, epoch=2))
+    buf.add(_traj(1, 1, epoch=3))
+    taken = buf.take(2, epoch=3, max_staleness=1)
+    assert len(taken) == 1 and taken[0][0].prompt_id == 1
+    assert buf.stale_discards == 2
+    assert len(buf) == 0
+
+
+def test_replay_buffer_capacity_evicts_oldest_ready_never_partial():
+    """Overflow drops the oldest *complete* group; partial groups survive —
+    their siblings are still streaming in."""
+    buf = ReplayBuffer(capacity=3, group_size=2)
+    buf.add(_traj(0, 0))
+    buf.add(_traj(0, 1))           # ready group 0
+    buf.add(_traj(1, 0))           # partial, len == capacity
+    buf.add(_traj(2, 0))           # overflow -> evict ready group 0
+    assert buf.evicted == 2
+    assert buf.ready_groups == 0
+    assert len(buf) == 2           # both partials intact
+    buf.add(_traj(1, 1))           # partial completes after the eviction
+    assert buf.ready_groups == 1
+
+
+# ----------------------------------------------- service consumption harness
+
+def _consume(backend_kind, cfg, params, seed, *, n_updates=3, gpu=2, gsz=4,
+             max_staleness=2, train_s=1.0, sanitize=True):
+    """Drive a RolloutService the way the async trainer does: seed waves of
+    groups, consume complete groups FIFO, publish a weight epoch per update,
+    inject a replacement wave.  Returns (per-consumed-traj staleness,
+    stamps-by-batch-position, buffer, service, result)."""
+    pool = n_updates * gpu
+    batch, predictor = build_workbench(n_prompts=pool, group_size=gsz,
+                                       seed=seed)
+    by_pid = {}
+    for t in batch:
+        by_pid.setdefault(t.prompt_id, []).append(t)
+    groups = list(by_pid.values())
+    order = {t.traj_id: i for i, t in enumerate(batch)}
+    rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=2,
+                         quantum=8, seed=seed, link_bandwidth=math.inf,
+                         trace=True, sanitize=sanitize)
+    if backend_kind == "sim":
+        lens = {tid: len(p)
+                for tid, p in synth_prompts(batch, seed=seed).items()}
+        backend, controller = make_sim_components(predictor, 2, rcfg,
+                                                  prompt_lens=lens)
+        svc = RolloutService(backend, controller, rcfg)
+    else:
+        runtime = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                               config=rcfg)
+        svc = RolloutService(runtime.backend, runtime.controller, rcfg)
+    svc.submit([t for g in groups[:gpu] for t in g])
+    next_wave = gpu
+    buf = ReplayBuffer(capacity=256, group_size=gsz)
+    staleness, stamps = [], {}
+    updates = 0
+    free = 0.0
+    for traj in svc.stream():
+        stamps[order[traj.traj_id]] = traj.weight_epoch
+        buf.add(traj)
+        while updates < n_updates and buf.ready_groups >= gpu:
+            taken = buf.take(gpu, epoch=svc.epoch, max_staleness=max_staleness)
+            if not taken:
+                break
+            free = max(svc.now, free) + train_s
+            updates += 1
+            staleness.extend(svc.epoch - t.weight_epoch
+                             for g in taken for t in g)
+            if updates < n_updates:
+                svc.sync_weights(at=free)
+                wave = groups[next_wave:next_wave + len(taken)]
+                next_wave += len(taken)
+                if wave:
+                    svc.submit([t for g in wave for t in g])
+        if updates >= n_updates:
+            break
+    res = svc.close()
+    for t in res.trajectories:
+        stamps.setdefault(order[t.traj_id], t.weight_epoch)
+    # traj_ids come from the process-global counter (differ run to run), so
+    # cross-run trace comparison rewrites them to batch positions
+    norm_trace = [(k, order.get(tid, tid), wid) for k, tid, wid in res.trace]
+    return staleness, stamps, buf, svc, res, norm_trace
+
+
+def test_no_consumed_trajectory_exceeds_max_staleness():
+    """The tentpole property, multi-seed: over every consumed trajectory,
+    published_epoch - weight_epoch <= max_staleness, enforced by the buffer
+    (discards counted, never trained on) — and the property must bite: epochs
+    actually advance and nonzero staleness is actually observed."""
+    saw_nonzero = False
+    for seed in (3, 5, 9):
+        staleness, _, buf, svc, _, _ = _consume("sim", None, None, seed,
+                                                max_staleness=2)
+        assert staleness, f"seed {seed}: nothing consumed"
+        assert max(staleness) <= 2, \
+            f"seed {seed}: staleness bound violated ({max(staleness)})"
+        assert svc.epoch >= 2, f"seed {seed}: no epoch churn — test is vacuous"
+        saw_nonzero |= any(s > 0 for s in staleness)
+    assert saw_nonzero, "every consumed trajectory was perfectly fresh"
+
+
+def test_tight_bound_forces_discards_not_violations():
+    """With max_staleness=0 and in-flight syncs, some groups MUST be refused
+    (stamps inevitably lag the published epoch mid-run) — refused means
+    discarded and counted, never consumed past the bound."""
+    staleness, _, buf, svc, _, _ = _consume("sim", None, None, SEED,
+                                            max_staleness=0)
+    assert all(s == 0 for s in staleness)
+    assert buf.stale_discards > 0
+
+
+def test_weight_epoch_stamps_bit_identical_across_backends(setup):
+    """Async-plane parity: same workload + same sync schedule => the engine
+    and the analytic twin stamp every trajectory with the same weight epoch
+    and make the same decisions (trace equality), extending the PR-5 parity
+    guarantee to harvest/weight-sync events."""
+    cfg, params = setup
+    s_stale, s_stamps, _, s_svc, s_res, s_trace = _consume("sim", cfg,
+                                                           params, SEED)
+    e_stale, e_stamps, _, e_svc, e_res, e_trace = _consume("engine", cfg,
+                                                           params, SEED)
+    assert e_stamps == s_stamps
+    assert e_stale == s_stale
+    assert e_svc.applied_epochs == s_svc.applied_epochs
+    assert e_trace == s_trace
+    assert e_res.makespan == s_res.makespan
+    assert e_res.sanitizer["violations"] == s_res.sanitizer["violations"] == 0
+    assert e_res.sanitizer["weight_syncs"] > 0          # the fence engaged
+
+
+def test_stamping_parity_survives_chaos(setup):
+    """Weight-epoch discipline under failure realism: a seeded mid-run worker
+    death + revival (with recoveries rebinding residency) must leave the
+    per-trajectory stamps bit-identical across backends."""
+    from repro.core.faults import FaultPlan
+
+    cfg, params = setup
+    # ONE batch for both backends (deepcopied): fault injection hashes the
+    # runtime traj_id, so rebuilding the workbench per run would inject a
+    # different chaos schedule and parity would be vacuous-false
+    master, predictor = build_workbench(n_prompts=4, group_size=4, seed=SEED)
+
+    def run(kind):
+        batch = copy.deepcopy(master)
+        order = {t.traj_id: i for i, t in enumerate(batch)}
+        rcfg = RuntimeConfig(scheduler="pps", migration=True, max_active=2,
+                             quantum=8, seed=SEED, link_bandwidth=math.inf,
+                             trace=True, sanitize=True)
+        faults = FaultPlan.chaos(seed=SEED, n_workers=2, horizon=2.0)
+        if kind == "sim":
+            lens = {tid: len(p)
+                    for tid, p in synth_prompts(batch, seed=SEED).items()}
+            backend, controller = make_sim_components(
+                predictor, 2, rcfg, prompt_lens=lens, faults=faults)
+            svc = RolloutService(backend, controller, rcfg, faults=faults)
+        else:
+            runtime = make_runtime(cfg, params, batch, predictor, n_workers=2,
+                                   config=rcfg, faults=faults)
+            svc = RolloutService(runtime.backend, runtime.controller, rcfg,
+                                 faults=faults)
+        svc.submit(batch)
+        stamps = {}
+        for k, traj in enumerate(svc.stream()):
+            stamps[order[traj.traj_id]] = traj.weight_epoch
+            if k == 2:                       # one in-flight sync mid-chaos
+                svc.sync_weights()
+        res = svc.close()
+        trace = [(k, order.get(tid, tid), wid) for k, tid, wid in res.trace]
+        return stamps, res, trace
+
+    s_stamps, s_res, s_trace = run("sim")
+    e_stamps, e_res, e_trace = run("engine")
+    assert s_res.worker_deaths == e_res.worker_deaths == 1
+    assert e_stamps == s_stamps
+    assert e_res.recoveries == s_res.recoveries
+    assert e_trace == s_trace
+    assert e_res.makespan == s_res.makespan
+    assert e_res.sanitizer["violations"] == s_res.sanitizer["violations"] == 0
+
+
+# ------------------------------------------------------ sanitizer invariants
+
+def _sanitizer(n_workers=2, max_active=2, trajs=()):
+    from repro.analysis.sanitize import TraceSanitizer
+    return TraceSanitizer(list(trajs), n_workers, max_active)
+
+
+def test_sanitizer_flags_harvest_before_finish():
+    san = _sanitizer()
+    san.observe("harvest", 7, 0)
+    assert san.report()["violations"] == 1
+
+
+def test_sanitizer_flags_double_harvest():
+    san = _sanitizer()
+    san.observe("start", 7, 0)
+    san.observe("finish", 7, 0)
+    san.observe("harvest", 7, 0)
+    san.observe("harvest", 7, 0)
+    assert san.report()["violations"] == 1
+    assert san.report()["harvests"] == 1
+
+
+def test_sanitizer_flags_sync_with_active_steps():
+    """The drain fence's contract: a weight sync may only land on a worker
+    with no step in progress and no resident trajectories."""
+    san = _sanitizer()
+    san.observe("start", 7, 0)
+    san.observe("weight_sync", 1, 0)
+    assert san.report()["violations"] == 1
+
+
+def test_sanitizer_flags_sync_with_residents_held():
+    san = _sanitizer()
+    san.observe("admit", 7, 0)
+    san.observe("weight_sync", 1, 0)
+    assert san.report()["violations"] == 1
+
+
+def test_sanitizer_flags_nonmonotone_applied_epoch():
+    san = _sanitizer()
+    san.observe("weight_sync", 2, 0)
+    san.observe("weight_sync", 1, 0)          # goes backwards
+    assert san.report()["violations"] == 1
+    san2 = _sanitizer()
+    san2.observe("weight_sync", 1, 1)
+    san2.observe("weight_sync", 1, 1)         # repeats (not strictly monotone)
+    assert san2.report()["violations"] == 1
+
+
+def test_sanitizer_flags_midflight_stamp_change():
+    """Stamp immutability: a lane's weight_epoch must not change between
+    dispatches — residents finish on the policy that admitted them."""
+    t = _traj(0, 0, epoch=0)
+    san = _sanitizer(trajs=[t])
+    san.observe("start", t.traj_id, 0)
+    san.observe("step", t.traj_id, 0)
+    t.weight_epoch = 3                         # illegal in-flight restamp
+    san.observe("start", t.traj_id, 0)
+    assert san.report()["violations"] >= 1
+
+
+def test_sanitizer_accepts_legal_sync_sequence():
+    san = _sanitizer()
+    san.observe("admit", 7, 0)
+    san.observe("start", 7, 0)
+    san.observe("step", 7, 0)      # step completion frees the slot
+    san.observe("finish", 7, 0)
+    san.observe("harvest", 7, 0)
+    san.observe("weight_sync", 1, 0)
+    san.observe("weight_sync", 2, 0)
+    rep = san.report()
+    assert rep["violations"] == 0
+    assert rep["harvests"] == 1 and rep["weight_syncs"] == 2
+
+
+# ----------------------------------------------------------- async trainer
+
+def test_train_async_staleness_bounded_partial_batches(setup):
+    """train_async consumes partial batches (complete groups only) with the
+    staleness bound enforced, publishes in-flight weight epochs, and keeps
+    the fleet resident for the whole run."""
+    import repro.rl.data as D
+    from repro.rl.loop import HeddleTrainer, TrainerConfig
+
+    cfg, _ = setup
+    tr = HeddleTrainer(cfg, TrainerConfig(group_size=2, n_workers=2, seed=0,
+                                          max_steps_per_traj=2))
+    history = tr.train_async(n_updates=3, groups_per_update=2,
+                             max_staleness=2, backlog_groups=4, seed=0)
+    assert len(history) == 3
+    for m in history:
+        assert m["groups_consumed"] >= 1          # partial batches allowed
+        assert m["staleness"] <= 2                # the bound held
+    assert any(m["staleness"] > 0 for m in history)   # ...and it actually bit
+    # in-flight epochs were published after every non-final update
+    assert [m["weight_epoch"] for m in history[:-1]] == [1.0, 2.0]

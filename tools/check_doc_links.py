@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Docs link checker: every relative link and anchor must resolve.
+
+Scans README.md and docs/*.md for markdown links, and fails (exit 1, one
+line per problem) when a relative link points at a file that does not exist
+or an anchor that no heading in the target file produces. External links
+(``scheme://`` or ``mailto:``) are ignored — this gate is about keeping the
+repo's own cross-references from rotting, not about the internet.
+
+Anchors are matched against GitHub's heading slugification (lowercase, strip
+punctuation, spaces to hyphens, ``-1``/``-2`` suffixes for duplicates), so a
+link that works in the repo browser passes and one that 404s fails.
+
+Usage: python tools/check_doc_links.py [root]   (root defaults to the repo)
+Stdlib only; wired into the CI lint job and tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target captured up to the first unescaped ')'; images too.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```|~~~)")
+_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # scheme: (http, mailto, ...)
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans (links there aren't links)."""
+    out: list[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(re.sub(r"`[^`]*`", "", line))
+    return "\n".join(out)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor algorithm: lowercase, drop punctuation, spaces->hyphens."""
+    # headings may themselves contain markdown links/code: use the visible text
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    heading = heading.replace("`", "")
+    heading = heading.strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)  # \w keeps unicode letters + _
+    return heading.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    slugs: dict[str, int] = {}
+    out: set[str] = set()
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = _slugify(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(md_path: Path, root: Path) -> list[str]:
+    problems: list[str] = []
+    for target in _LINK.findall(_strip_code(md_path.read_text(encoding="utf-8"))):
+        if _EXTERNAL.match(target):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            try:
+                dest.relative_to(root)
+            except ValueError:
+                problems.append(f"{md_path}: link escapes the repo: {target}")
+                continue
+            if not dest.exists():
+                problems.append(f"{md_path}: broken link: {target}")
+                continue
+        else:
+            dest = md_path
+        if anchor:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                problems.append(f"{md_path}: anchor into non-markdown: {target}")
+            elif anchor.lower() not in _anchors(dest):
+                problems.append(f"{md_path}: broken anchor: {target}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    problems: list[str] = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            problems.append(f"missing expected doc: {f}")
+            continue
+        checked += 1
+        problems.extend(check_file(f, root))
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"check_doc_links: {checked} files, {len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
