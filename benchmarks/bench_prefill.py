@@ -57,8 +57,11 @@ def run(fast: bool = True, smoke: bool = False,
     prompts = [[5 + int(t) for t in rng.integers(0, 100, s)] for s in lengths]
 
     def make(use_chunked, reuse, slots):
+        # paged=False: this bench prices the *dense* prefill planes (the compile
+        # counters watch the dense _admit/_prefill_chunk jit caches); the paged
+        # data plane has its own bench (bench_paging.py)
         return W.RolloutWorker(cfg, params, capacity=256, max_slots=slots,
-                               sampler=greedy, chunk_size=chunk,
+                               sampler=greedy, chunk_size=chunk, paged=False,
                                use_chunked=use_chunked, prefix_reuse=reuse)
 
     # ---- compile count + new-length admission latency ------------------------

@@ -17,6 +17,9 @@ Rules (catalog + rationale in docs/analysis.md):
   host-sync calls inside decode/prefill loops.
 * **HDL004** — every event kind pushed onto an orchestrator heap has a
   handler branch, and tuple payloads carry a version/token stamp.
+* **HDL005** — no host-gather (``np.asarray`` / ``jax.device_get``) of KV
+  buffers inside migration/checkpoint/restore paths; same-process moves
+  D2D-copy resident pages (durability bounces carry a justified noqa).
 
 Suppression: append ``# heddle: noqa HDL002`` (comma-separate multiple ids,
 bare ``# heddle: noqa`` silences all rules) to the flagged line, with a
@@ -146,7 +149,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(v.render())
     n = len(violations)
     print(f"heddle-lint: {n} violation{'s' if n != 1 else ''}"
-          f" ({', '.join(sorted(args.select)) if args.select else 'HDL001-HDL004'})",
+          f" ({', '.join(sorted(args.select)) if args.select else 'HDL001-HDL005'})",
           file=sys.stderr)
     return min(n, 125)
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 from repro.analysis.rules.determinism import RuleHDL001, RuleHDL002
 from repro.analysis.rules.events import RuleHDL004
 from repro.analysis.rules.jit_hygiene import RuleHDL003
+from repro.analysis.rules.migration import RuleHDL005
 
 #: all registered rules, keyed by id, in catalog order
 ALL_RULES = {
@@ -22,6 +23,8 @@ ALL_RULES = {
     "HDL002": RuleHDL002(),
     "HDL003": RuleHDL003(),
     "HDL004": RuleHDL004(),
+    "HDL005": RuleHDL005(),
 }
 
-__all__ = ["ALL_RULES", "RuleHDL001", "RuleHDL002", "RuleHDL003", "RuleHDL004"]
+__all__ = ["ALL_RULES", "RuleHDL001", "RuleHDL002", "RuleHDL003", "RuleHDL004",
+           "RuleHDL005"]

@@ -1,0 +1,103 @@
+"""HDL005 — no host-gather of KV buffers on migration/checkpoint paths.
+
+The paged data plane moves KV between engines as device-to-device block
+copies of *resident* pages (``worker._ingest_pages`` / ``model
+.paged_gather_pages``).  A ``np.asarray`` / ``np.array`` / ``jax.device_get``
+of cache pages inside a ``migrate*`` / ``checkpoint*`` / ``restore*``
+function round-trips the whole payload through host memory — the exact
+bounce the paged pool exists to eliminate, and it serializes the device
+against the host for the full transfer.
+
+Legitimate host bounces carry a noqa with the reason: a tool-boundary
+checkpoint must outlive its source device; the dense fallback pool and the
+legacy lane engine have no page tables to D2D-copy.
+
+The rule only fires when the gathered expression references a KV-ish name
+(``cache`` / ``page`` / ``kv`` / ``lane`` / ``pool`` / ``block``) — small
+metadata like RNG keys or slot indices host-gather freely.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from repro.analysis.rules.base import FileContext, Scope, Violation, dotted_name
+
+#: functions that form the KV transfer family
+_MIG_FN = re.compile(r"(^|_)(migrate|checkpoint|restore)", re.I)
+
+#: host-gathering callables (resolved dotted paths)
+_SYNC_PATHS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+#: tree-mapping callables whose mapped fn may be a host gather
+_TREE_MAPS = {"jax.tree.map", "jax.tree_map", "jax.tree_util.tree_map"}
+
+#: identifier fragments that mark an expression as KV-cache data
+_KV_HINTS = ("cache", "page", "kv", "lane", "pool", "block")
+
+
+def _mentions_kv(node: ast.AST) -> bool:
+    """True if any identifier / attribute / string key in ``node`` looks KV-ish."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            text = sub.id
+        elif isinstance(sub, ast.Attribute):
+            text = sub.attr
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            text = sub.value
+        else:
+            continue
+        low = text.lower()
+        if any(h in low for h in _KV_HINTS):
+            return True
+    return False
+
+
+class RuleHDL005:
+    """Migration/checkpoint paths must move KV device-to-device, not via host."""
+
+    rule_id = "HDL005"
+    scope = Scope.NONE  # anywhere an engine moves KV
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _MIG_FN.search(node.name):
+                continue
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                hit = self._host_gather(call, ctx)
+                if hit is None:
+                    continue
+                spelled, payload = hit
+                if not _mentions_kv(payload):
+                    continue  # keys / slot indices / metadata: fine to gather
+                yield Violation(
+                    self.rule_id, ctx.path, call.lineno, call.col_offset,
+                    f"`{spelled}` host-gathers a KV buffer inside "
+                    f"`{node.name}`: same-process moves must D2D-copy "
+                    f"resident pages (paged_gather_pages/_ingest_pages); "
+                    f"justify a durability or dense-fallback bounce with "
+                    f"a noqa")
+
+    @staticmethod
+    def _host_gather(call: ast.Call,
+                     ctx: FileContext) -> Optional[tuple[str, ast.AST]]:
+        """(spelling, gathered expression) when ``call`` host-gathers."""
+        target = ctx.imports.resolve(call.func)
+        if target in _SYNC_PATHS and call.args:
+            return f"{dotted_name(call.func)}(...)", call.args[0]
+        # jax.tree.map(np.asarray, tree): the gather hides in the mapped fn
+        if target in _TREE_MAPS and len(call.args) >= 2:
+            fn = ctx.imports.resolve(call.args[0])
+            if fn in _SYNC_PATHS:
+                return (f"{dotted_name(call.func)}({dotted_name(call.args[0])},"
+                        f" ...)", call.args[1])
+        return None
+
+
+__all__ = ["RuleHDL005"]

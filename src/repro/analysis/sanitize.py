@@ -383,4 +383,41 @@ class TraceSanitizer:
         }
 
 
-__all__ = ["TraceSanitizer", "TraceViolationError"]
+def check_block_conservation(worker_stats: dict) -> list[str]:
+    """Paged-pool drain check: every block reference must be accounted for.
+
+    Consumes the ``blocks_*`` occupancy counters paged engines merge into
+    ``dispatch_stats()`` (workers without them — dense fallback, sim — are
+    skipped) and enforces, per worker:
+
+    * ``allocated_total - freed_total == resident + shared`` — cumulative
+      reference increments minus decrements equals live references (a
+      mismatch is a leaked or double-freed block);
+    * ``total == free + resident`` — distinct blocks partition exactly into
+      the free heap and the resident set.
+
+    Returns violation strings (empty = conserved); the runtime raises
+    :class:`TraceViolationError` on any when ``sanitize`` is on.
+    """
+    out: list[str] = []
+    for wid in sorted(worker_stats):
+        s = worker_stats[wid]
+        if "blocks_allocated_total" not in s:
+            continue
+        live = s["blocks_allocated_total"] - s["blocks_freed_total"]
+        held = s["blocks_resident"] + s["blocks_shared"]
+        if live != held:
+            out.append(
+                f"worker {wid}: block-reference leak — allocated "
+                f"{s['blocks_allocated_total']} - freed "
+                f"{s['blocks_freed_total']} = {live} live refs, but resident "
+                f"{s['blocks_resident']} + shared {s['blocks_shared']} = {held}")
+        if s["blocks_total"] != s["blocks_free"] + s["blocks_resident"]:
+            out.append(
+                f"worker {wid}: block partition broken — total "
+                f"{s['blocks_total']} != free {s['blocks_free']} + resident "
+                f"{s['blocks_resident']}")
+    return out
+
+
+__all__ = ["TraceSanitizer", "TraceViolationError", "check_block_conservation"]

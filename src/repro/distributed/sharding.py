@@ -237,6 +237,7 @@ def param_shardings(params, mesh: Optional[Mesh] = None):
 # "h") are benign: the divisibility check replicates whichever dim doesn't divide.
 CACHE_LOGICAL_AXES: dict[str, tuple[Optional[str], ...]] = {
     "pos": ("batch",),
+    "page_table": ("batch", None),
     "k": ("batch", "kv_seq", "kv_heads", None),
     "v": ("batch", "kv_seq", "kv_heads", None),
     "xk": ("batch", None, "kv_heads", None),

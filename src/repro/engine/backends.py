@@ -43,6 +43,19 @@ def quantum_seconds(q: int, token_time: float, interference, batch: int) -> floa
     return q * token_time * float(interference(batch))
 
 
+def _package_bytes(pkg: dict, jax) -> int:
+    """Transfer size of a migration/checkpoint package.
+
+    Paged workers stamp ``logical_bytes`` — resident pages + dense lane state,
+    the bytes that actually move — so pricing no longer assumes a full
+    preallocated lane.  Legacy packages fall back to summing the cache leaves
+    (``.nbytes`` on the leaf itself: no host gather just to price a transfer)."""
+    n = pkg.get("logical_bytes")
+    if n is not None:
+        return int(n)
+    return sum(int(x.nbytes) for x in jax.tree.leaves(pkg["cache"]))
+
+
 def admission_seconds(n_tokens: int, token_time: float, prefill_speedup: float) -> float:
     """Virtual seconds to prefill ``n_tokens`` (compute-bound vs decode)."""
     return n_tokens * token_time / prefill_speedup
@@ -145,6 +158,7 @@ class SimBackend:
         prompt_lens: Optional[dict[int, int]] = None,
         faults: Optional[FaultPlan] = None,
         retry: RetryPolicy = RetryPolicy(),
+        page_size: int = 0,
     ):
         self.quantum = quantum
         self.faults = faults
@@ -158,6 +172,10 @@ class SimBackend:
         self.kv_heads = kv_heads
         self.kv_head_dim = kv_head_dim
         self.latency_scale = latency_scale
+        # paged-KV twin: price migrated KV as resident *pages* (context rounded
+        # up to the page grid), matching the engine's logical_bytes accounting.
+        # 0 = dense lanes (exact context bytes, the pre-paging model).
+        self.page_size = page_size
         self.prompt_lens = prompt_lens
         self.workers = [
             _SimWorker(i, mp, tt, interference)
@@ -311,9 +329,16 @@ class SimBackend:
     def can_migrate(self, traj: Trajectory) -> bool:
         return True
 
+    def _paged_ctx(self, ctx: int) -> int:
+        """Round a context up to the page grid when pricing paged transfers."""
+        if self.page_size <= 0:
+            return ctx
+        return -(-ctx // self.page_size) * self.page_size
+
     def migrate_out(self, traj: Trajectory, dst: int) -> float:
         kv = kv_cache_bytes(
-            traj.context_tokens, self.kv_layers, self.kv_heads, self.kv_head_dim
+            self._paged_ctx(traj.context_tokens),
+            self.kv_layers, self.kv_heads, self.kv_head_dim,
         )
         return migration_time(kv, self.link_bandwidth)
 
@@ -341,7 +366,7 @@ class SimBackend:
         self._gen_time.pop(tid, None)
         self.cache_home[tid] = {dst}
         kv = kv_cache_bytes(
-            max(traj.context_tokens, traj.prompt_tokens),
+            self._paged_ctx(max(traj.context_tokens, traj.prompt_tokens)),
             self.kv_layers, self.kv_heads, self.kv_head_dim,
         )
         return migration_time(kv, self.link_bandwidth)
@@ -580,8 +605,7 @@ class EngineBackend:
         pkg = src.engine.migrate_out(traj.traj_id)
         self.wall += time.perf_counter() - t0
         self.in_transit[traj.traj_id] = pkg
-        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(pkg["cache"]))
-        return migration_time(nbytes, self.link_bandwidth)
+        return migration_time(_package_bytes(pkg, jax), self.link_bandwidth)
 
     def migrate_in(self, traj: Trajectory, dst: int) -> None:
         pkg = self.in_transit.pop(traj.traj_id)
@@ -624,15 +648,24 @@ class EngineBackend:
         if self.checkpoint_dir:
             from repro.checkpoint import checkpoint as ckpt
 
+            # paged engines snapshot resident pages + dense state; dense
+            # engines a full lane — persist whichever tree the package carries
+            kv = ({"cache": pkg["cache"]} if "cache" in pkg
+                  else {"pages": pkg["pages"], "state": pkg["state"]})
+            extra = {
+                "seq_id": int(pkg["seq_id"]),
+                "tokens": [int(x) for x in pkg["tokens"]],
+                "generated": int(pkg["generated"]),
+            }
+            if "pages" in pkg:
+                extra.update(page_size=int(pkg["page_size"]),
+                             capacity=int(pkg["capacity"]),
+                             logical_bytes=int(pkg["logical_bytes"]))
             ckpt.save(
                 f"{self.checkpoint_dir}/traj_{tid:05d}",
-                {"cache": pkg["cache"], "key": np.asarray(pkg["key"])},
+                {**kv, "key": np.asarray(pkg["key"])},
                 step=traj.num_steps,
-                extra={
-                    "seq_id": int(pkg["seq_id"]),
-                    "tokens": [int(x) for x in pkg["tokens"]],
-                    "generated": int(pkg["generated"]),
-                },
+                extra=extra,
             )
 
     def restore(self, traj: Trajectory, dst: int) -> float:
@@ -663,8 +696,7 @@ class EngineBackend:
         if extra:  # tool output absorbed after the snapshot: replay it
             view.engine.extend(tid, extra)
         self.wall += time.perf_counter() - t0
-        nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(pkg["cache"]))
-        return migration_time(nbytes, self.link_bandwidth)
+        return migration_time(_package_bytes(pkg, jax), self.link_bandwidth)
 
     def kill(self, wid: int) -> None:
         """Worker death: every resident lane (live + retired prefix cache) is

@@ -173,7 +173,7 @@ class LegacyRolloutWorker:
             "tokens": list(seq.tokens),
             "generated": seq.generated,
             "key": np.asarray(seq.key),
-            "cache": jax.tree.map(np.asarray, seq.cache),   # device -> host buffer
+            "cache": jax.tree.map(np.asarray, seq.cache),  # heddle: noqa HDL005 -- legacy per-sequence engine predates the paged pool; host bounce is its only transport
         }
         return package
 

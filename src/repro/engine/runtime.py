@@ -72,6 +72,9 @@ class RuntimeConfig:
     checkpoint_dir: str | None = None    # persist tool-boundary checkpoints here
     open_loop: bool = False              # serve arrival-stamped trajectories
                                          # (submit_time) instead of a t=0 batch
+    paged: bool | None = None            # paged-KV data plane (None = auto: on
+                                         # whenever model.supports_paged_kv)
+    page_size: int = 16                  # KV tokens per physical block
 
 
 @dataclass
@@ -338,7 +341,8 @@ def make_runtime(cfg, params, batch: list[Trajectory], predictor,
     fleet_obj = RolloutFleet(cfg, params, spec, capacity=cap,
                              max_slots=len(batch),
                              sampler=SamplerConfig(temperature=temperature),
-                             seed=config.seed, devices=devices)
+                             seed=config.seed, devices=devices,
+                             paged=config.paged, page_size=config.page_size)
     env = ToolEnvironment(seed=config.seed,
                           latency_scale=config.tool_latency_scale,
                           faults=faults, retry=retry)
@@ -376,7 +380,9 @@ def make_sim_components(predictor, n_workers: int = 2,
         link_bandwidth=config.link_bandwidth,
         latency_scale=config.tool_latency_scale,
         quantum=config.quantum, prompt_lens=prompt_lens,
-        faults=faults, retry=retry)
+        faults=faults, retry=retry,
+        # price migrated KV on the page grid iff the engine twin runs paged
+        page_size=0 if config.paged is False else config.page_size)
     return backend, controller
 
 
@@ -537,6 +543,15 @@ class RolloutRuntime:
         for view in self.backend.views:              # final telemetry snapshot
             self.controller.record_worker_stats(view.wid,
                                                 view.engine.dispatch_stats())
+        if cfg.sanitize:
+            from repro.analysis.sanitize import (TraceViolationError,
+                                                 check_block_conservation)
+
+            leaks = check_block_conservation(self.controller.worker_stats)
+            if leaks:
+                raise TraceViolationError(leaks, len(leaks))
+            if isinstance(res.sanitizer, dict) and res.sanitizer:
+                res.sanitizer["block_conservation"] = "ok"
         makespan = res.makespan
         total = self.backend.total_tokens
         return RuntimeResult(

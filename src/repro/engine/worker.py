@@ -42,6 +42,7 @@ from jax import lax
 
 from repro.distributed.sharding import (axis_rules, cache_shardings,
                                         param_shardings)
+from repro.engine.paging import PagePool, PagePoolExhausted
 from repro.engine.sampler import SamplerConfig, sample_slots
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -261,6 +262,70 @@ def _extend_slot(cfg: ModelConfig, params, pool, tool_tokens, slot, mesh=None):
     return pool
 
 
+# ---- paged-pool kernels (model.supports_paged_kv data plane) -------------------
+# The pool dict grows a ``page_table`` leaf; every kernel donates the pool so XLA
+# updates blocks/rows in place.  Host-side block accounting (PagePool) never sees
+# the device: the worker keeps lane -> block lists and mirrors them into the
+# device page table through ``_paged_row`` / ``_paged_lane``.
+
+@partial(jax.jit, static_argnames=("cfg", "mesh"), donate_argnums=(2,))
+def _paged_chunk(cfg: ModelConfig, params, pool, slot, tokens, length, mesh=None):
+    """One fixed-shape (1, C) chunk straight into lane ``slot``'s pages."""
+    with axis_rules(mesh):
+        return M.prefill_chunk_paged(cfg, params, pool, slot, tokens, length)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _paged_lane(pool, slot, row, pos0):
+    """Map a lane: page-table row + position reset (admission ingress)."""
+    return M.paged_set_lane(pool, slot, row, pos0)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _paged_row(pool, slot, row):
+    """Rewrite one page-table row without touching ``pos`` (coverage extension,
+    retire-trim: unmapped tail entries go back to scratch so a masked lane's
+    self-healing write can never land in a reassigned block)."""
+    return dict(pool, page_table=pool["page_table"].at[slot].set(row))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_block(pool, dst, src):
+    """Device-to-device copy of one physical block (prefix-share boundary page)."""
+    return M.paged_copy_block(pool, dst, src)
+
+
+@jax.jit
+def _gather_pages(pool, idx):
+    """Lift resident physical blocks out of the pool (D2D migration payload)."""
+    return M.paged_gather_pages(pool, idx)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _paged_ingest(pool, pages, idx, state, slot, row):
+    """Migration ingress: scatter page stacks into freshly allocated blocks and
+    write the lane's dense state + page-table row."""
+    pool = M.paged_scatter_pages(pool, pages, idx)
+    return M.paged_write_state(pool, state, slot, row)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _paged_implant(pool, lane, slot, row, n):
+    """Scatter a dense batch-1 lane into mapped pages (cross-layout ingress)."""
+    return M.paged_write_lane(pool, lane, slot, row, n)
+
+
+@partial(jax.jit, static_argnames=("cfg", "capacity", "mesh"), donate_argnums=(2,))
+def _admit_paged(cfg: ModelConfig, params, pool, tokens, slot, row,
+                 capacity: int, mesh=None):
+    """Full-sequence paged admission (non-chunkable configs: MoE, etc.) — the
+    dense ``_admit`` followed by a page scatter instead of a lane write."""
+    with axis_rules(mesh):
+        _, _, lane = M.forward_full(cfg, params, {"tokens": tokens},
+                                    capacity=capacity)
+        return M.paged_write_lane(pool, lane, slot, row, tokens.shape[1])
+
+
 @partial(jax.jit,
          static_argnames=("cfg", "n_tokens", "stop_token", "sampler", "mesh"),
          donate_argnums=(2,))
@@ -328,7 +393,9 @@ class RolloutWorker:
                  use_chunked: bool | None = None,
                  retired_kv_bytes: int | None = None,
                  prefix_index_nodes: int = 65_536,
-                 mesh=None, mp: int = 1):
+                 mesh=None, mp: int = 1,
+                 paged: bool | None = None, page_size: int = 16,
+                 num_blocks: int | None = None):
         self.cfg = cfg
         self.capacity = capacity
         self.max_slots = max_slots
@@ -346,7 +413,27 @@ class RolloutWorker:
             self.params = jax.device_put(params, param_shardings(params, mesh))
         else:
             self.params = params
-        self.pool = self._place_cache(M.init_cache(cfg, None, max_slots, capacity))
+        # paged KV data plane: default ON whenever the architecture supports it —
+        # admission capacity then scales with resident tokens, not max_len * slots
+        self._paged = ((paged if paged is not None else True)
+                       and M.supports_paged_kv(cfg))
+        if self._paged:
+            ps = max(int(page_size), 1)
+            while capacity % ps:                   # page size must tile the lane
+                ps //= 2
+            self.page_size = ps
+            self.num_pages = capacity // ps
+            # default block budget: the dense pool's HBM footprint (+ scratch)
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else max_slots * self.num_pages + 1)
+            self.pages = PagePool(self.num_blocks)
+            self.lane_pages: dict[int, list[int]] = {}   # slot -> ordered blocks
+            self.block_grows = 0
+            self.pool = self._place_cache(M.init_paged_pool(
+                cfg, None, max_slots, self.num_blocks, ps, self.num_pages))
+        else:
+            self.pool = self._place_cache(
+                M.init_cache(cfg, None, max_slots, capacity))
         self.store: dict[int, Sequence] = {}       # resident sequences (incl. preempted)
         self.chunk_size = chunk_size
         self._chunked = ((use_chunked if use_chunked is not None else True)
@@ -357,6 +444,18 @@ class RolloutWorker:
         lane = jax.eval_shape(lambda: M.init_cache(cfg, None, 1, capacity))
         self._lane_bytes = sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
                                for x in jax.tree.leaves(lane))
+        if self._paged:
+            # per-block bytes (k+v across every paged layer) and the per-lane
+            # dense-state remainder — kv_bytes() prices *resident pages* only
+            itemsize = jnp.dtype(cfg.dtype).itemsize
+            n_attn = sum(1 for k in cfg.block_pattern
+                         if k.partition("+")[0] == "attn")
+            self._page_bytes = (2 * cfg.n_periods * n_attn * self.page_size
+                                * cfg.n_kv_heads * cfg.hd * itemsize)
+            state = jax.eval_shape(lambda: M.init_cache(cfg, None, 1, 0))
+            self._state_bytes = sum(
+                int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                for x in jax.tree.leaves(state))
         budget = (retired_kv_bytes if retired_kv_bytes is not None
                   else self._lane_bytes * max_slots)
         self._max_retired = budget // self._lane_bytes if self._lane_bytes else 0
@@ -408,36 +507,117 @@ class RolloutWorker:
         """Lowest free lane, else the LRU retired lane, else pool growth (doubling).
 
         The returned lane is about to be overwritten, so its radix refs are
-        invalidated here — one rule covers release, eviction, and external resets."""
+        invalidated here — one rule covers release, eviction, and external resets.
+        In paged mode the reclaimed lane's pages are freed (shared blocks survive
+        via their sharers' refcounts) and its page-table row reset to scratch."""
         used = {s.slot for s in self.store.values()}
         for slot in range(self.max_slots):
             if slot not in used and slot not in self.retired:
                 self.prefix_index.invalidate(slot)
+                if self._paged:
+                    self._free_lane_pages(slot)
                 return slot
         if self.retired:
             slot, _ = self.retired.popitem(last=False)
             self.prefix_index.invalidate(slot)
+            if self._paged:
+                self._free_lane_pages(slot)
             return slot
         slot = self.max_slots
-        fresh = self._place_cache(
-            M.init_cache(self.cfg, None, self.max_slots, self.capacity))
-        # re-pin after the eager concat, which drops the sharding
-        self.pool = self._place_cache(M.concat_pools(self.pool, fresh))
+        if self._paged:
+            # lane growth only: page-table rows + dense per-lane state double,
+            # the physical block pools are untouched (lanes and HBM decouple)
+            self.pool = self._place_cache(
+                M.grow_paged_lanes(self.cfg, self.pool, self.max_slots))
+        else:
+            fresh = self._place_cache(
+                M.init_cache(self.cfg, None, self.max_slots, self.capacity))
+            # re-pin after the eager concat, which drops the sharding
+            self.pool = self._place_cache(M.concat_pools(self.pool, fresh))
         self.max_slots *= 2
         self.pool_grows += 1
         self.prefix_index.invalidate(slot)
         return slot
 
     def _retire_slot(self, slot: int, n_tokens: int) -> None:
-        """Hand a released lane to the radix cache (LRU, byte-budgeted)."""
+        """Hand a released lane to the radix cache (LRU, byte-budgeted).
+
+        Paged: the lane's over-allocated tail pages (decode headroom past the
+        last resident token) are freed immediately — a retired lane holds
+        exactly ceil(n_tokens / page_size) blocks."""
         if not (self._reuse and self._max_retired > 0 and n_tokens > 0):
             self.prefix_index.invalidate(slot)
+            if self._paged:
+                self._free_lane_pages(slot)
             return
+        if self._paged:
+            self._trim_lane_pages(slot, n_tokens)
         self.retired[slot] = n_tokens
         self.retired.move_to_end(slot)
         while len(self.retired) > self._max_retired:
             old, _ = self.retired.popitem(last=False)
             self.prefix_index.invalidate(old)
+            if self._paged:
+                self._free_lane_pages(old)
+
+    # ------------------------------------------------------------ page bookkeeping
+    def _row_of(self, blocks: list[int]) -> jnp.ndarray:
+        """Fixed-shape (num_pages,) device row; unmapped tail -> scratch block 0."""
+        row = np.zeros((self.num_pages,), np.int32)
+        row[:len(blocks)] = blocks
+        return jnp.asarray(row)
+
+    def _sync_row(self, slot: int) -> None:
+        """Mirror ``lane_pages[slot]`` into the device page table."""
+        self.pool = _paged_row(self.pool, jnp.asarray(slot, jnp.int32),
+                               self._row_of(self.lane_pages.get(slot, [])))
+
+    def _free_lane_pages(self, slot: int) -> None:
+        """Release every page a lane holds and point its row at scratch."""
+        blocks = self.lane_pages.pop(slot, None)
+        if blocks:
+            self.pages.free(blocks)
+            self._sync_row(slot)
+
+    def _trim_lane_pages(self, slot: int, n_tokens: int) -> None:
+        """Free pages past ceil(n_tokens / page_size) (retire headroom trim)."""
+        blocks = self.lane_pages.get(slot, [])
+        keep = -(-n_tokens // self.page_size)
+        if len(blocks) > keep:
+            self.pages.free(blocks[keep:])
+            self.lane_pages[slot] = blocks[:keep]
+            self._sync_row(slot)
+
+    def _alloc_blocks(self, n: int) -> list[int]:
+        """Allocate ``n`` physical blocks, evicting retired lanes under pressure
+        and doubling the device block pool only once nothing is left to reclaim."""
+        while True:
+            try:
+                return self.pages.alloc(n)
+            except PagePoolExhausted:
+                if self.retired:
+                    old, _ = self.retired.popitem(last=False)
+                    self.prefix_index.invalidate(old)
+                    self._free_lane_pages(old)
+                    continue
+                self._grow_blocks(n)
+
+    def _grow_blocks(self, min_extra: int) -> None:
+        extra = max(min_extra, self.num_blocks)     # doubling growth
+        self.pool = self._place_cache(M.grow_paged_blocks(self.pool, extra))
+        self.pages.grow(self.num_blocks + extra)
+        self.num_blocks += extra
+        self.block_grows += 1
+
+    def _ensure_coverage(self, slot: int, total_tokens: int) -> None:
+        """Map enough pages on lane ``slot`` to hold ``total_tokens`` positions
+        (capped at lane capacity — past it, writes self-heal into scratch)."""
+        need = min(-(-total_tokens // self.page_size), self.num_pages)
+        have = self.lane_pages.get(slot, [])
+        if len(have) >= need:
+            return
+        self.lane_pages[slot] = have + self._alloc_blocks(need - len(have))
+        self._sync_row(slot)
 
     # ------------------------------------------------------------ lifecycle
     def prefill(self, seq_id: int, tokens: list[int]) -> None:
@@ -450,7 +630,9 @@ class RolloutWorker:
         else:
             self.prefix_index.match_len(tokens)
         slot = self._alloc_slot()
-        if not self._chunked:
+        if self._paged:
+            self._prefill_paged(slot, tokens, reuse_n, src)
+        elif not self._chunked:
             arr = jnp.asarray(tokens, jnp.int32)[None]
             self.pool = _admit(self.cfg, self.params, self.pool, arr, slot,
                                self.capacity, mesh=self.mesh)
@@ -470,6 +652,51 @@ class RolloutWorker:
         self.store[seq_id] = Sequence(seq_id, list(tokens), slot, key)
         self.prefix_index.insert(tokens, slot=slot)
 
+    def _prefill_paged(self, slot: int, tokens: list[int], reuse_n: int,
+                       src: int | None) -> None:
+        """Paged admission: share the matched prefix's full pages by refcount
+        (zero KV copy), D2D-copy its boundary partial page, then chunk-prefill
+        the suffix straight into freshly mapped pages.
+
+        Warm GRPO siblings therefore pay page-table rows + O(suffix) compute —
+        the dense path's O(reuse_n) lane-slice copy disappears entirely."""
+        S, ps = len(tokens), self.page_size
+        blocks: list[int] = []
+        boundary: tuple[int, int] | None = None
+        reuse_eff = 0
+        if self._chunked and src is not None and reuse_n > 0:
+            if src in self.retired:
+                self.retired.move_to_end(src)             # LRU touch
+            src_blocks = self.lane_pages.get(src, [])
+            reuse_eff = min(reuse_n, len(src_blocks) * ps)
+            n_full = reuse_eff // ps
+            if n_full:
+                blocks = list(src_blocks[:n_full])
+                self.pages.share(blocks)
+            if reuse_eff % ps:
+                [b] = self._alloc_blocks(1)
+                boundary = (b, src_blocks[n_full])
+                blocks.append(b)
+            self.reused_tokens += reuse_eff
+        need = min(-(-S // ps), self.num_pages)
+        if need > len(blocks):
+            blocks = blocks + self._alloc_blocks(need - len(blocks))
+        self.lane_pages[slot] = blocks
+        self.pool = _paged_lane(self.pool, jnp.asarray(slot, jnp.int32),
+                                self._row_of(blocks),
+                                jnp.asarray(reuse_eff, jnp.int32))
+        if boundary is not None:
+            self.pool = _copy_block(self.pool, jnp.asarray(boundary[0], jnp.int32),
+                                    jnp.asarray(boundary[1], jnp.int32))
+        if not self._chunked:
+            arr = jnp.asarray(tokens, jnp.int32)[None]
+            self.pool = _admit_paged(self.cfg, self.params, self.pool, arr, slot,
+                                     self._row_of(blocks), S, mesh=self.mesh)
+            self.prefilled_tokens += S
+            return
+        self._chunk_into_paged(slot, tokens, reuse_eff)
+        self.prefilled_tokens += S - reuse_eff
+
     def _chunk_into(self, lane, tokens: list[int], start: int):
         """Feed ``tokens[start:]`` through the fixed-shape chunk kernel."""
         C = self.chunk_size
@@ -484,11 +711,33 @@ class RolloutWorker:
             self.prefill_dispatches += 1
         return lane
 
+    def _chunk_into_paged(self, slot: int, tokens: list[int], start: int) -> None:
+        """Feed ``tokens[start:]`` straight into lane ``slot``'s pages — no
+        lane gather/implant round trip; the pool is the chunk kernel's operand."""
+        C = self.chunk_size
+        off, S = start, len(tokens)
+        while off < S:
+            step = min(C, S - off)
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :step] = tokens[off:off + step]
+            self.pool = _paged_chunk(self.cfg, self.params, self.pool,
+                                     jnp.asarray(slot, jnp.int32),
+                                     jnp.asarray(buf),
+                                     jnp.asarray(step, jnp.int32), mesh=self.mesh)
+            off += step
+            self.prefill_dispatches += 1
+
     def extend(self, seq_id: int, tool_tokens: list[int]) -> None:
         """Absorb tool output: chunked prefill into the lane at its current offset
         (ceil(L/C) lane-sized dispatches instead of L full-pool decode steps)."""
         seq = self.store[seq_id]
-        if self._chunked:
+        if self._paged and self._chunked:
+            ext = list(seq.tokens) + [int(t) for t in tool_tokens]
+            self._ensure_coverage(seq.slot, len(ext))
+            self._chunk_into_paged(seq.slot, ext, len(seq.tokens))
+            self.absorbed_tokens += len(tool_tokens)
+            seq.tokens = ext
+        elif self._chunked:
             lane = _gather_lane(self.pool, jnp.asarray(seq.slot, jnp.int32))
             ext = list(seq.tokens) + [int(t) for t in tool_tokens]
             lane = self._chunk_into(lane, ext, len(seq.tokens))
@@ -506,6 +755,8 @@ class RolloutWorker:
         Kept as the fallback for non-chunkable configs and as the baseline
         ``benchmarks/bench_prefill.py`` measures the chunked path against."""
         seq = self.store[seq_id]
+        if self._paged:
+            self._ensure_coverage(seq.slot, len(seq.tokens) + len(tool_tokens))
         arr = jnp.asarray(tool_tokens, jnp.int32)
         self.pool = _extend_slot(self.cfg, self.params, self.pool, arr, seq.slot,
                                  mesh=self.mesh)
@@ -542,6 +793,12 @@ class RolloutWorker:
             seq = self.store[sid]
             seq.preempted = False
             live[seq.slot] = True
+            if self._paged:
+                # map decode headroom up front: the loop writes positions
+                # [len(tokens), len(tokens) + n_tokens) — one host-side check,
+                # zero device syncs inside the loop (unused tail pages are
+                # trimmed back at retire time)
+                self._ensure_coverage(seq.slot, len(seq.tokens) + n_tokens)
         last, live, keys = jnp.asarray(last), jnp.asarray(live), jnp.asarray(keys)
         # without a stop token nothing can finish early: one fused dispatch; with one,
         # chunk so the loop exits once every requested lane has stopped
@@ -608,15 +865,7 @@ class RolloutWorker:
         if seq is not None:
             self._retire_slot(seq.slot, len(seq.tokens))
 
-    def migrate_out(self, seq_id: int) -> dict:
-        """Package one lane's context + cache for transfer (§5.3 KV migration).
-
-        Gathers a single lane — co-resident sequences are untouched.  The local
-        copy retires into the radix cache, so group siblings arriving later still
-        find the shared prefix here."""
-        seq = self.store.pop(seq_id)
-        lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
-        self._retire_slot(seq.slot, len(seq.tokens))
+    def _package_meta(self, seq: Sequence, preempted: bool, finished: bool) -> dict:
         return {
             "seq_id": seq.seq_id,
             "tokens": list(seq.tokens),
@@ -624,10 +873,46 @@ class RolloutWorker:
             "key": np.asarray(seq.key),
             # lifecycle flags travel with the lane: a trajectory preempted before a
             # tool-interval migration must arrive preempted, not active
-            "preempted": seq.preempted,
-            "finished": seq.finished,
-            "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
+            "preempted": preempted,
+            "finished": finished,
         }
+
+    def _gather_resident(self, seq: Sequence) -> tuple[dict, dict, list[int], int]:
+        """Pages + dense state of one paged lane, trimmed to resident tokens."""
+        keep = -(-len(seq.tokens) // self.page_size)
+        blocks = self.lane_pages.get(seq.slot, [])[:keep]
+        pages = _gather_pages(self.pool, jnp.asarray(blocks, jnp.int32))
+        state = M.paged_gather_state(self.pool, seq.slot)
+        logical = len(blocks) * self._page_bytes + self._state_bytes
+        return pages, state, blocks, logical
+
+    def migrate_out(self, seq_id: int) -> dict:
+        """Package one lane's context + cache for transfer (§5.3 KV migration).
+
+        Gathers a single lane — co-resident sequences are untouched.  The local
+        copy retires into the radix cache, so group siblings arriving later still
+        find the shared prefix here.
+
+        Paged workers package *device-resident* page stacks trimmed to the
+        lane's resident tokens: a same-process move is block copies device to
+        device, never a host bounce, and ``logical_bytes`` prices exactly the
+        resident pages + dense state so the controller/simulator cost model
+        stops charging full-lane bytes."""
+        seq = self.store.pop(seq_id)
+        if self._paged:
+            pages, state, blocks, logical = self._gather_resident(seq)
+            pkg = self._package_meta(seq, seq.preempted, seq.finished)
+            pkg.update(pages=pages, state=state, page_size=self.page_size,
+                       capacity=self.capacity, logical_bytes=logical)
+            self._retire_slot(seq.slot, len(seq.tokens))
+            return pkg
+        lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
+        self._retire_slot(seq.slot, len(seq.tokens))
+        pkg = self._package_meta(seq, seq.preempted, seq.finished)
+        pkg["cache"] = jax.tree.map(np.asarray, lane)  # heddle: noqa HDL005 -- dense fallback pool has no page table; the host bounce is its only transport
+        pkg["logical_bytes"] = sum(x.nbytes
+                                   for x in jax.tree.leaves(pkg["cache"]))
+        return pkg
 
     def checkpoint_out(self, seq_id: int) -> dict:
         """Host-gather one lane WITHOUT evicting it (tool-boundary checkpoint).
@@ -636,26 +921,68 @@ class RolloutWorker:
         running here — the copy is a recovery source for the fault layer
         (``migrate_in`` on a survivor re-implants it after a worker death).
         Lifecycle flags are snapshotted clean: a restore always re-admits the
-        trajectory parked at its tool boundary, never mid-preemption."""
+        trajectory parked at its tool boundary, never mid-preemption.
+
+        The checkpoint must survive this worker's device dying, so the paged
+        payload is host-gathered here — the one legitimate host bounce in the
+        migration family (``logical_bytes`` still prices resident pages only,
+        identical to the D2D package for the same lane)."""
         seq = self.store[seq_id]
+        if self._paged:
+            pages, state, blocks, logical = self._gather_resident(seq)
+            pkg = self._package_meta(seq, False, False)
+            pkg.update(
+                pages=jax.tree.map(np.asarray, pages),  # heddle: noqa HDL005 -- checkpoint copy must outlive the source device
+                state=jax.tree.map(np.asarray, state),  # heddle: noqa HDL005 -- checkpoint copy must outlive the source device
+                page_size=self.page_size, capacity=self.capacity,
+                logical_bytes=logical)
+            return pkg
         lane = M.gather_slots(self.pool, np.asarray([seq.slot]))
-        return {
-            "seq_id": seq.seq_id,
-            "tokens": list(seq.tokens),
-            "generated": seq.generated,
-            "key": np.asarray(seq.key),
-            "preempted": False,
-            "finished": False,
-            "cache": jax.tree.map(np.asarray, lane),        # device -> host buffer
-        }
+        pkg = self._package_meta(seq, False, False)
+        pkg["cache"] = jax.tree.map(np.asarray, lane)  # heddle: noqa HDL005 -- checkpoint copy must outlive the source device (dense fallback)
+        pkg["logical_bytes"] = sum(x.nbytes
+                                   for x in jax.tree.leaves(pkg["cache"]))
+        return pkg
+
+    def _ingest_pages(self, package: dict, slot: int) -> None:
+        """Land a paged package: allocate blocks, D2D-scatter the page stacks."""
+        pages, state = package["pages"], package["state"]
+        n = next(iter(jax.tree.leaves(pages))).shape[1] if pages else 0
+        blocks = self._alloc_blocks(n) if n else []
+        self.lane_pages[slot] = blocks
+        if self.mesh is not None:             # re-shard for THIS worker's sub-mesh
+            pages = jax.device_put(pages, cache_shardings(pages, self.mesh))
+            state = self._place_cache(state)
+        self.pool = _paged_ingest(self.pool, pages,
+                                  jnp.asarray(blocks, jnp.int32), state,
+                                  jnp.asarray(slot, jnp.int32),
+                                  self._row_of(blocks))
 
     def migrate_in(self, package: dict) -> None:
         """Implant a migrated lane into a free slot (capacities must match).
 
-        The package's cache is host-resident (``migrate_out`` gathers the source
-        lane, whatever its sharding); implanting re-shards it for THIS worker's
-        mesh, so migration crosses MP degrees — an mp=4 lane lands correctly on
-        an mp=1 pool and vice versa."""
+        Four ingress layouts meet here: a paged package landing on a paged
+        worker with the same page size scatters its blocks device-to-device; a
+        paged package on a mismatched/dense worker is flattened back to a lane
+        (``model.pages_to_lane`` — the cross-degree fallback); a dense package
+        on a paged worker scatters through ``model.paged_write_lane``; and the
+        dense-to-dense path is the original lane implant.  Implanting re-shards
+        for THIS worker's mesh, so migration crosses MP degrees — an mp=4 lane
+        lands correctly on an mp=1 pool and vice versa."""
+        slot = self._alloc_slot()
+        n_tokens = len(package["tokens"])
+        if "pages" in package:
+            if (self._paged and package.get("page_size") == self.page_size
+                    and package.get("capacity") == self.capacity):
+                self._ingest_pages(package, slot)
+                self._register_seq(package, slot)
+                return
+            # layout mismatch: flatten the pages back into a dense lane
+            cache = M.pages_to_lane(package["pages"], package["state"],
+                                    self.capacity)
+        else:
+            cache = package["cache"]
+
         def check(dst, src):                  # fail fast on capacity/arch mismatch
             if (dst.shape[0],) + dst.shape[2:] != (src.shape[0],) + src.shape[2:]:
                 raise ValueError(
@@ -663,13 +990,25 @@ class RolloutWorker:
                     f"{dst.shape} — source and destination workers must share "
                     f"capacity and architecture")
 
-        jax.tree.map(check, self.pool["blocks"], package["cache"]["blocks"])
-        slot = self._alloc_slot()
+        if not self._paged:
+            jax.tree.map(check, self.pool["blocks"], cache["blocks"])
         if self.mesh is not None:             # host -> this worker's sub-mesh
-            lane = self._place_cache(package["cache"])
+            lane = self._place_cache(cache)
         else:
-            lane = jax.tree.map(jnp.asarray, package["cache"])
-        self.pool = _implant(self.pool, lane, slot)
+            lane = jax.tree.map(jnp.asarray, cache)
+        if self._paged:
+            need = min(-(-n_tokens // self.page_size), self.num_pages)
+            blocks = self._alloc_blocks(need)
+            self.lane_pages[slot] = blocks
+            self.pool = _paged_implant(self.pool, lane,
+                                       jnp.asarray(slot, jnp.int32),
+                                       self._row_of(blocks),
+                                       jnp.asarray(n_tokens, jnp.int32))
+        else:
+            self.pool = _implant(self.pool, lane, slot)
+        self._register_seq(package, slot)
+
+    def _register_seq(self, package: dict, slot: int) -> None:
         key = package.get("key")
         if key is None:                                     # foreign package: re-key
             key = np.asarray(jax.random.fold_in(self.base_key, package["seq_id"]))
@@ -684,17 +1023,26 @@ class RolloutWorker:
     def kv_bytes(self, seq_id: int) -> int:
         """Per-lane cache footprint.
 
-        Computed once at construction from the lane *shapes* (``jax.eval_shape``),
-        so the reported figure is stable across pool growth — dividing the live
-        pool by the current ``max_slots`` tied the answer to growth timing."""
+        Dense pools report the fixed lane shape (``jax.eval_shape`` at
+        construction, stable across growth).  Paged lanes report *resident*
+        pages + dense state — the number that actually gates admission."""
         assert seq_id in self.store
+        if self._paged:
+            slot = self.store[seq_id].slot
+            return (len(self.lane_pages.get(slot, [])) * self._page_bytes
+                    + self._state_bytes)
         return self._lane_bytes
 
     def reset_cache(self) -> None:
         """Drop every resident and retired lane and all radix refs.
 
         Required on weight sync (RL loop): retired KV computed under old weights
-        must never be implanted into post-update admissions."""
+        must never be implanted into post-update admissions.  Paged lanes free
+        their blocks through the pool's normal accounting (conservation stats
+        stay consistent); rows are reset to scratch lazily at reallocation."""
+        if self._paged:
+            for slot in list(self.lane_pages):
+                self._free_lane_pages(slot)
         self.store.clear()
         self.retired.clear()
         self.prefix_index = PrefixCacheIndex(
@@ -707,7 +1055,16 @@ class RolloutWorker:
         and the simulator's cache model consume observed hit rates, not assumed
         ones."""
         idx = self.prefix_index
+        stats = {}
+        if self._paged:
+            # page-pool occupancy watermarks + the block-conservation feed
+            # (TraceSanitizer checks allocated == freed + resident + shared at
+            # drain; serve.py surfaces the watermarks in the run report)
+            stats = {"blocks_" + k: v for k, v in self.pages.stats().items()}
+            stats["page_size"] = self.page_size
+            stats["block_grows"] = self.block_grows
         return {
+            **stats,
             "reused_tokens": self.reused_tokens,
             "prefilled_tokens": self.prefilled_tokens,
             "absorbed_tokens": self.absorbed_tokens,

@@ -61,6 +61,100 @@ def _decode_attn_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_attn_kernel(pt_ref, vlen_ref, q_ref, k_ref, v_ref, o_ref,
+                              m_ref, l_ref, acc_ref, *, page_size: int,
+                              num_pages: int):
+    """Ragged paged variant: the grid's last axis walks the lane's page table.
+
+    The physical block streamed into ``k_ref``/``v_ref`` at step ``i`` is chosen
+    by the BlockSpec index_map from the scalar-prefetched page table
+    (``pt_ref[b, i]``), so the gather over non-contiguous KV blocks happens in
+    the HBM->VMEM pipeline — no (B, capacity, KV, hd) contiguous view is ever
+    materialized.  Pages past the lane's resident length resolve to block 0
+    (scratch); their scores are masked to -1e30 like any tail padding.
+    """
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(F32)                      # (G, hd)
+    k = k_ref[0, :, 0].astype(F32)                   # (page_size, hd)
+    v = v_ref[0, :, 0].astype(F32)                   # (page_size, hd)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # (G, page_size)
+    vlen = vlen_ref[b]
+    pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < vlen, s, -1e30)
+
+    m_prev = m_ref[...]                               # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # (G, page_size)
+    corr = jnp.exp(m_prev - m_new)                    # (G, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(i == num_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, page_table: jax.Array,
+                                  valid_len: jax.Array, *,
+                                  interpret: bool = True) -> jax.Array:
+    """Paged flash-decode: gather KV blocks through a page table.
+
+    q: (B, KV, G, hd); k_pool, v_pool: (NB, page_size, KV, hd) physical block
+    pools; page_table: (B, num_pages) int32 (block 0 = scratch for unmapped
+    entries); valid_len: scalar or (B,) int32 resident token counts.
+    Returns (B, KV, G, hd).
+    """
+    B, KV, G, hd = q.shape
+    page_size = k_pool.shape[1]
+    num_pages = page_table.shape[1]
+    vlen = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (B,))
+    pt = page_table.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_attn_kernel, page_size=page_size,
+                               num_pages=num_pages)
+    grid = (B, KV, num_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, i, pt, vl: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, hd),
+                             lambda b, h, i, pt, vl: (pt[b, i], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, hd),
+                             lambda b, h, i, pt, vl: (pt[b, i], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, i, pt, vl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), F32),       # running max m
+                pltpu.VMEM((G, 1), F32),       # running denom l
+                pltpu.VMEM((G, hd), F32),      # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(pt, vlen, q, k_pool, v_pool)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             valid_len: jax.Array, *, block_c: int = DEFAULT_BLOCK_C,

@@ -12,7 +12,8 @@ import os
 import jax
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
 from repro.kernels.mamba_scan import mamba_scan_pallas, mamba_scan_ref
 
 
@@ -36,6 +37,20 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret = jax.default_backend() != "tpu"
         return decode_attention_pallas(q, k, v, valid_len, interpret=interpret)
     return ref.decode_attention_ref(q, k, v, valid_len)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, valid_len: jax.Array, *,
+                           force_pallas: bool = False) -> jax.Array:
+    """Paged flash-decode: q (B,KV,G,hd) vs block pools (NB,ps,KV,hd) gathered
+    through a (B,num_pages) page table.  Same dispatch contract as
+    :func:`decode_attention`; the reference path gathers the lane view and is
+    bit-exact with the dense layout over the valid region."""
+    if force_pallas or _use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return paged_decode_attention_pallas(q, k_pool, v_pool, page_table,
+                                             valid_len, interpret=interpret)
+    return ref.paged_decode_attention_ref(q, k_pool, v_pool, page_table, valid_len)
 
 
 def mamba_scan(dt: jax.Array, b_in: jax.Array, c_in: jax.Array, x: jax.Array,

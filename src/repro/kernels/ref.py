@@ -37,3 +37,23 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v.dtype), v,
                      preferred_element_type=F32)
     return out.astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                               page_table: jax.Array, valid_len: jax.Array
+                               ) -> jax.Array:
+    """Paged decode attention oracle: gather blocks, then dense attention.
+
+    q: (B, KV, G, hd); k_pool, v_pool: (NB, page_size, KV, hd) physical blocks;
+    page_table: (B, num_pages) int32 (unmapped entries point at scratch block 0
+    — their slots are masked out by ``valid_len``); valid_len: scalar or (B,).
+
+    The gathered (B, num_pages * page_size, KV, hd) view is bit-identical to a
+    dense lane layout over the valid region, so paged-vs-dense token parity is
+    exact through this path.  Returns (B, KV, G, hd).
+    """
+    B = q.shape[0]
+    num_pages, ps = page_table.shape[1], k_pool.shape[1]
+    kg = k_pool[page_table].reshape(B, num_pages * ps, *k_pool.shape[2:])
+    vg = v_pool[page_table].reshape(B, num_pages * ps, *v_pool.shape[2:])
+    return decode_attention_ref(q, kg, vg, valid_len)

@@ -278,6 +278,13 @@ def main(argv=None):
               f"prefix reuse {stats['reused_tokens']}/"
               f"{stats['reused_tokens'] + stats['prefilled_tokens']} admit tokens, "
               f"{stats['retired_lanes']} retired lanes")
+        if "blocks_total" in stats:                   # paged KV pool occupancy
+            print(f"  pages: {stats['blocks_resident']}/{stats['blocks_total']}"
+                  f" blocks resident (peak {stats['blocks_used_high_watermark']}"
+                  f", {stats['blocks_shared']} shared refs, page size "
+                  f"{stats['page_size']}), alloc/free "
+                  f"{stats['blocks_allocated_total']}/"
+                  f"{stats['blocks_freed_total']}, {stats['block_grows']} grows")
     steps = sum(t.num_steps for t in res.trajectories)
     multi = sum(1 for t in res.trajectories if t.num_steps > 1)
     rate = controller.measured_reuse_rate

@@ -191,6 +191,115 @@ def attention_decode(
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
 
 
+def attention_decode_paged(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token paged decode: scatter new KV into the lane's current block, attend
+    through the page table.
+
+    k_pool/v_pool: (NB, page_size, KV, hd) physical blocks shared by every lane;
+    page_table: (B, num_pages) int32 (block 0 = scratch for unmapped entries);
+    pos: (B,) int32.  A lane's write lands at block ``page_table[b, pos//ps]``,
+    offset ``pos % ps`` — free/masked lanes whose rows are unmapped (or whose pos
+    sits past capacity) write into scratch, which is the paged form of the dense
+    pool's self-healing invariant.  Returns (out (B,1,d_model), k_pool', v_pool').
+    """
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    pos = jnp.broadcast_to(pos, (B,))
+    if use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    ps = k_pool.shape[1]
+    num_pages = page_table.shape[1]
+    cap = num_pages * ps
+    bidx = jnp.arange(B)
+    page = jnp.clip(pos // ps, 0, num_pages - 1)
+    blk = jnp.where(pos < cap, page_table[bidx, page], 0)   # overflow -> scratch
+    off = pos % ps
+    k_pool = k_pool.at[blk, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v[:, 0].astype(v_pool.dtype))
+    k_pool = shard(k_pool, (None, "kv_seq", "kv_heads", None))
+    v_pool = shard(v_pool, (None, "kv_seq", "kv_heads", None))
+    valid_len = jnp.minimum(pos + 1, cap)
+    out = kops.paged_decode_attention(q.reshape(B, KV, H // KV, hd), k_pool,
+                                      v_pool, page_table, valid_len,
+                                      force_pallas=cfg.use_pallas_decode)
+    out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_pool, v_pool
+
+
+def attention_prefill_chunk_paged(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    pt_row: jax.Array,
+    off: jax.Array,
+    length: jax.Array,
+    *,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape chunk prefill straight into a lane's pages.
+
+    x: (1, C, d) normed hidden states (rows >= ``length`` are padding); pt_row:
+    (num_pages,) int32, mapped far enough to cover ``off + length`` tokens.  The
+    chunk's K/V rows scatter to their absolute (block, offset) slots — padding
+    and out-of-capacity rows route to scratch block 0 — then each query ``i``
+    attends to positions ``t <= off + i`` through the gathered page view.  The
+    suffix of a prefix-shared admission runs through this path attending to the
+    *shared* pages in place: zero prefix KV copies.  Returns
+    (out (1, C, d_model), k_pool', v_pool').
+    """
+    B, Cn, _ = x.shape
+    KV, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    positions = (off + jnp.arange(Cn))[None]                  # (1, C) absolute
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    ps = k_pool.shape[1]
+    num_pages = pt_row.shape[0]
+    cap = num_pages * ps
+    rows = off + jnp.arange(Cn)
+    valid = (jnp.arange(Cn) < length) & (rows < cap)
+    page = jnp.clip(rows // ps, 0, num_pages - 1)
+    blk = jnp.where(valid, pt_row[page], 0)                   # padding -> scratch
+    slot = rows % ps
+    k_pool = k_pool.at[blk, slot].set(k[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, slot].set(v[0].astype(v_pool.dtype))
+    kg = k_pool[pt_row][None].reshape(1, cap, KV, hd)
+    vg = v_pool[pt_row][None].reshape(1, cap, KV, hd)
+    mask = jnp.arange(cap)[None, :] <= rows[:, None]          # (C, cap)
+    qg = q.reshape(B, Cn, KV, G, hd)
+    out = _plain_attention(qg, kg, vg, mask[None, None, None],
+                           1.0 / math.sqrt(hd))
+    out = out.reshape(B, Cn, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_pool, v_pool
+
+
 def attention_prefill_chunk(
     p: dict,
     x: jax.Array,

@@ -460,11 +460,17 @@ def _merge_state(active, new, old):
     return jax.tree.map(sel, new, old)
 
 
-def _layer_step(cfg, kind, p, x, cache, pos, active=None):
+def _layer_step(cfg, kind, p, x, cache, pos, active=None, page_table=None):
     mixer, _, mlp_kind = kind.partition("+")
     new_cache = cache
     h = L.block_norm(cfg, p["norm1"], x)
-    if mixer in ("attn", "dec"):
+    if mixer == "attn" and page_table is not None:
+        out, ck, cv = L.attention_decode_paged(p["mixer"], h, cfg, cache["k"],
+                                               cache["v"], page_table, pos,
+                                               use_rope=_use_rope(cfg))
+        x = x + out
+        new_cache = dict(cache, k=ck, v=cv)
+    elif mixer in ("attn", "dec"):
         out, ck, cv = L.attention_decode(p["mixer"], h, cfg, cache["k"], cache["v"],
                                          pos, window=cfg.sliding_window,
                                          use_rope=_use_rope(cfg))
@@ -513,6 +519,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, active=None):
     by the caller).
     """
     pos = cache["pos"]
+    page_table = cache.get("page_table")       # paged pool: blocks are shared pages
     x = params["tok_embed"][tokens]
     x = shard(x, ("batch", None, None))
     if cfg.arch_type == "audio":
@@ -525,13 +532,17 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, active=None):
         for i, kind in enumerate(cfg.block_pattern):
             keyname = f"{i:02d}_{kind}"
             x, new_c[keyname] = _layer_step(cfg, kind, p_period[keyname], x,
-                                            c_period[keyname], pos, active)
+                                            c_period[keyname], pos, active,
+                                            page_table)
         return x, new_c
 
     x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
     logits = _logits(cfg, params, x)
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
-    return logits[:, 0], {"pos": new_pos, "blocks": new_blocks}
+    new_cache = {"pos": new_pos, "blocks": new_blocks}
+    if page_table is not None:
+        new_cache["page_table"] = page_table
+    return logits[:, 0], new_cache
 
 
 # ------------------------------------------------------------------ chunked prefill
@@ -770,3 +781,279 @@ def concat_pools(a: dict, b: dict) -> dict:
     return {"pos": jnp.concatenate([a["pos"], b["pos"]]),
             "blocks": jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=1),
                                    a["blocks"], b["blocks"])}
+
+
+# ------------------------------------------------------------------ paged-KV pool ops
+#
+# A paged pool replaces the per-lane (P, B, capacity, KV, hd) attention leaves with
+# physical block pools (P, num_blocks, page_size, KV, hd) shared by every lane, plus
+# a (B, num_pages) ``page_table`` mapping logical page index -> block id per lane
+# (block 0 is reserved scratch: unmapped entries — and any masked lane's self-healing
+# write — resolve there).  Recurrent state, cross-KV and ``pos`` keep their dense
+# per-lane layout: only position-indexed attention KV pages.  Host-side block
+# bookkeeping (alloc/free/refcount sharing) lives in ``engine.paging.PagePool``.
+
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Paged KV serves linear (non-ring) decoder-only stacks: sliding-window ring
+    writes would wrap across page boundaries, and cross-attention KV is not
+    position-paged.  MoE and recurrent mixers are fine — recurrent state simply
+    stays dense per-lane."""
+    for kind in cfg.block_pattern:
+        if kind.partition("+")[0] not in ("attn", "mamba", "mlstm", "slstm"):
+            return False
+    return cfg.sliding_window == 0 and cfg.arch_type not in ("audio", "vlm")
+
+
+def _paged_kind(kind: str) -> bool:
+    return kind.partition("+")[0] == "attn"
+
+
+def init_paged_pool(cfg: ModelConfig, params, max_lanes: int, num_blocks: int,
+                    page_size: int, num_pages: int) -> dict:
+    """Empty paged pool: block pools for attention KV, dense lanes for the rest."""
+    base = init_cache(cfg, params, max_lanes, capacity=0)   # attn leaves are empty
+    dtype = jnp.dtype(cfg.dtype)
+    KV, hd, P = cfg.n_kv_heads, cfg.hd, cfg.n_periods
+    blocks = {}
+    for key, c in base["blocks"].items():
+        if _paged_kind(key[3:]):
+            blocks[key] = {"k": jnp.zeros((P, num_blocks, page_size, KV, hd), dtype),
+                           "v": jnp.zeros((P, num_blocks, page_size, KV, hd), dtype)}
+        else:
+            blocks[key] = c
+    return {"pos": base["pos"],
+            "page_table": jnp.zeros((max_lanes, num_pages), jnp.int32),
+            "blocks": blocks}
+
+
+def _layer_chunk_paged(cfg, kind, p, x, cache, pt_row, slot, off, length):
+    mixer, _, mlp_kind = kind.partition("+")
+    new_cache = cache
+    h = L.block_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        out, ck, cv = L.attention_prefill_chunk_paged(
+            p["mixer"], h, cfg, cache["k"], cache["v"], pt_row, off, length,
+            use_rope=_use_rope(cfg))
+        x = x + out
+        new_cache = dict(cache, k=ck, v=cv)
+    elif mixer in ("mamba", "mlstm", "slstm"):
+        step_fn = {"mamba": L.mamba_step, "mlstm": L.mlstm_step,
+                   "slstm": L.slstm_step}[mixer]
+        state = jax.tree.map(lambda s: lax.dynamic_slice_in_dim(s, slot, 1, axis=0),
+                             cache)
+        out, state = _recurrent_chunk(step_fn, p["mixer"], h, cfg, state, length)
+        x = x + out
+        new_cache = jax.tree.map(
+            lambda c, s: lax.dynamic_update_slice_in_dim(c, s.astype(c.dtype),
+                                                         slot, axis=0),
+            cache, state)
+    else:
+        raise ValueError(f"prefill_chunk_paged: unsupported mixer {mixer!r} "
+                         "(see supports_paged_kv)")
+    if mlp_kind == "mlp":
+        h = L.block_norm(cfg, p["norm2"], x)
+        x = x + L.mlp(p["mlp"], h, cfg.activation)
+    elif mlp_kind:
+        raise ValueError("prefill_chunk_paged: MoE layers are not chunk-safe "
+                         "(padding rows would consume expert capacity)")
+    return x, new_cache
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, pool: dict, slot,
+                        tokens: jax.Array, length) -> dict:
+    """Teacher-force a fixed-shape (1, C) chunk straight into lane ``slot``'s pages.
+
+    The paged analogue of :func:`prefill_chunk`, minus the gather/implant round
+    trip: attention K/V scatters to the lane's mapped blocks at absolute
+    positions, queries attend through the gathered page view (resident prefix —
+    possibly *shared* pages — plus the chunk's own causal keys), and recurrent
+    state updates its dense lane row in place.  ``slot``/``length`` are traced,
+    so one compiled kernel serves every (lane, offset, tail-length).
+    """
+    assert tokens.shape[0] == 1, "prefill_chunk_paged operates on one lane"
+    slot = jnp.asarray(slot, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    off = pool["pos"][slot]
+    pt_row = pool["page_table"][slot]
+    x = params["tok_embed"][tokens]
+    x = shard(x, ("batch", None, None))
+
+    def body(x, xs):
+        p_period, c_period = xs
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            keyname = f"{i:02d}_{kind}"
+            x, new_c[keyname] = _layer_chunk_paged(cfg, kind, p_period[keyname], x,
+                                                   c_period[keyname], pt_row, slot,
+                                                   off, length)
+        return x, new_c
+
+    _, new_blocks = lax.scan(body, x, (params["blocks"], pool["blocks"]))
+    return {"pos": pool["pos"].at[slot].add(length),
+            "page_table": pool["page_table"], "blocks": new_blocks}
+
+
+def paged_set_lane(pool: dict, slot, row, pos0) -> dict:
+    """Map lane ``slot``: write its page-table row and reset its position.
+    ``row``: (num_pages,) int32, unmapped tail zeroed (scratch)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return {"pos": pool["pos"].at[slot].set(jnp.asarray(pos0, jnp.int32)),
+            "page_table": pool["page_table"].at[slot].set(
+                jnp.asarray(row, jnp.int32)),
+            "blocks": pool["blocks"]}
+
+
+def paged_copy_block(pool: dict, dst, src) -> dict:
+    """Device-to-device copy of one physical block across every paged leaf
+    (the boundary partial page of a prefix share is privately copied so the
+    sibling's suffix writes never touch the shared block)."""
+    dst = jnp.asarray(dst, jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    blocks = {}
+    for key, c in pool["blocks"].items():
+        if _paged_kind(key[3:]):
+            blocks[key] = {
+                name: leaf.at[:, dst].set(
+                    lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)[:, 0])
+                for name, leaf in c.items()}
+        else:
+            blocks[key] = c
+    return {**pool, "blocks": blocks}
+
+
+def paged_write_lane(pool: dict, lane: dict, slot, row, n) -> dict:
+    """Implant a dense batch-1 ``lane`` into the paged pool: scatter its first
+    ``n`` KV positions into the blocks mapped by ``row``, write its dense
+    per-lane leaves into lane ``slot`` (non-chunkable admission and the
+    cross-degree migration/restore fallback)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    num_pages = row.shape[0]
+    zero = jnp.zeros((), jnp.int32)
+    blocks = {}
+    for key, c in pool["blocks"].items():
+        src = lane["blocks"][key]
+        if _paged_kind(key[3:]):
+            ps = c["k"].shape[2]
+            cap = src["k"].shape[2]
+            j = jnp.arange(cap)
+            page = jnp.clip(j // ps, 0, num_pages - 1)
+            blk = jnp.where(j < n, row[page], 0)        # padding -> scratch
+            off = j % ps
+            blocks[key] = {
+                name: c[name].at[:, blk, off].set(
+                    src[name][:, 0].astype(c[name].dtype))
+                for name in c}
+        else:
+            def upd(dst, s):
+                start = (zero, slot) + (zero,) * (dst.ndim - 2)
+                return lax.dynamic_update_slice(dst, s.astype(dst.dtype), start)
+            blocks[key] = jax.tree.map(upd, c, src)
+    pos = pool["pos"].at[slot].set(lane["pos"][0].astype(pool["pos"].dtype))
+    return {"pos": pos, "page_table": pool["page_table"].at[slot].set(row),
+            "blocks": blocks}
+
+
+def paged_gather_pages(pool: dict, blocks_idx) -> dict:
+    """Pull physical blocks ``blocks_idx`` out of every paged leaf as compact
+    (P, n, page_size, KV, hd) stacks — the D2D migration payload (only the
+    lane's *resident* pages move, never the full preallocated lane)."""
+    idx = jnp.asarray(blocks_idx, jnp.int32)
+    return {key: {name: leaf[:, idx] for name, leaf in c.items()}
+            for key, c in pool["blocks"].items() if _paged_kind(key[3:])}
+
+
+def paged_gather_state(pool: dict, slot: int) -> dict:
+    """Batch-1 view of lane ``slot``'s dense (non-paged) leaves + ``pos``."""
+    blocks = {key: jax.tree.map(lambda x: x[:, slot:slot + 1], c)
+              for key, c in pool["blocks"].items() if not _paged_kind(key[3:])}
+    return {"pos": pool["pos"][slot:slot + 1], "blocks": blocks}
+
+
+def paged_scatter_pages(pool: dict, pages: dict, blocks_idx) -> dict:
+    """Write page stacks (from :func:`paged_gather_pages`) into physical blocks
+    ``blocks_idx`` — the D2D migration ingress."""
+    idx = jnp.asarray(blocks_idx, jnp.int32)
+    blocks = dict(pool["blocks"])
+    for key, pg in pages.items():
+        c = blocks[key]
+        blocks[key] = {name: c[name].at[:, idx].set(
+            jnp.asarray(pg[name]).astype(c[name].dtype)) for name in c}
+    return {**pool, "blocks": blocks}
+
+
+def paged_write_state(pool: dict, state: dict, slot, row) -> dict:
+    """Write a batch-1 dense-leaf ``state`` (from :func:`paged_gather_state`)
+    into lane ``slot`` and map its page-table row."""
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    blocks = dict(pool["blocks"])
+    for key, c in state["blocks"].items():
+        def upd(dst, src):
+            start = (zero, slot) + (zero,) * (dst.ndim - 2)
+            return lax.dynamic_update_slice(dst, jnp.asarray(src).astype(dst.dtype),
+                                            start)
+        blocks[key] = jax.tree.map(upd, pool["blocks"][key], c)
+    pos = pool["pos"].at[slot].set(jnp.asarray(state["pos"])[0])
+    return {"pos": pos,
+            "page_table": pool["page_table"].at[slot].set(jnp.asarray(row, jnp.int32)),
+            "blocks": blocks}
+
+
+def pages_to_lane(pages: dict, state: dict, capacity: int) -> dict:
+    """Reassemble a dense batch-1 lane from gathered pages + lane state (the
+    cross-degree / checkpoint-restore fallback: page stacks flatten back to a
+    contiguous (P, 1, capacity, KV, hd) lane, zero-padded past the resident
+    span)."""
+    blocks = {key: jax.tree.map(jnp.asarray, c) for key, c in state["blocks"].items()}
+    for key, pg in pages.items():
+        out = {}
+        for name, x in pg.items():
+            x = jnp.asarray(x)
+            P, n, ps = x.shape[:3]
+            flat = x.reshape((P, n * ps) + x.shape[3:])
+            pad = capacity - n * ps
+            if pad > 0:
+                flat = jnp.pad(flat, ((0, 0), (0, pad)) + ((0, 0),) * (flat.ndim - 2))
+            else:
+                flat = flat[:, :capacity]
+            out[name] = flat[:, None]                   # add the lane axis
+        blocks[key] = out
+    return {"pos": jnp.asarray(state["pos"]), "blocks": blocks}
+
+
+def grow_paged_blocks(pool: dict, extra: int) -> dict:
+    """Append ``extra`` zeroed physical blocks to every paged leaf (block-pool
+    growth: page tables are unaffected — block ids are stable)."""
+    blocks = {}
+    for key, c in pool["blocks"].items():
+        if _paged_kind(key[3:]):
+            blocks[key] = {
+                name: jnp.concatenate(
+                    [leaf, jnp.zeros((leaf.shape[0], extra) + leaf.shape[2:],
+                                     leaf.dtype)], axis=1)
+                for name, leaf in c.items()}
+        else:
+            blocks[key] = c
+    return {**pool, "blocks": blocks}
+
+
+def grow_paged_lanes(cfg: ModelConfig, pool: dict, extra: int) -> dict:
+    """Append ``extra`` empty lanes: dense per-lane leaves and page-table rows
+    grow; the physical block pools are untouched (lane count and block count
+    scale independently — the whole point of paging)."""
+    fresh = init_cache(cfg, None, extra, capacity=0)
+    blocks = {}
+    for key, c in pool["blocks"].items():
+        if _paged_kind(key[3:]):
+            blocks[key] = c
+        else:
+            blocks[key] = jax.tree.map(
+                lambda x, y: jnp.concatenate([x, y.astype(x.dtype)], axis=1),
+                c, fresh["blocks"][key])
+    num_pages = pool["page_table"].shape[1]
+    return {"pos": jnp.concatenate([pool["pos"], fresh["pos"]]),
+            "page_table": jnp.concatenate(
+                [pool["page_table"], jnp.zeros((extra, num_pages), jnp.int32)]),
+            "blocks": blocks}

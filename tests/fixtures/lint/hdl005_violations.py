@@ -1,0 +1,33 @@
+"""HDL005 fixture: host-gather of KV buffers in migration/checkpoint paths.
+
+Line numbers are pinned by tests/test_analysis.py — keep edits append-only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def migrate_out(seq, pool):
+    pkg = {"tokens": list(seq.tokens)}
+    pkg["cache"] = jax.tree.map(np.asarray, pool)   # line 12: tree-mapped gather
+    pkg["key"] = np.asarray(seq.key)                # fine: metadata, not KV
+    return pkg
+
+
+def checkpoint_lane(lane, blocks):
+    host = jax.device_get(lane)                     # line 18: device_get of a lane
+    resident = np.asarray(blocks)                   # line 19: block-stack gather
+    return host, resident
+
+
+def restore_cache(package):
+    return jax.tree.map(jnp.asarray, package["cache"])  # fine: host -> device
+
+
+def gather_stats(pool):
+    # not a migration-family function: host gathers are legal here
+    return np.asarray(pool["cache"])
+
+
+def migrate_with_noqa(seq, pool):
+    return jax.tree.map(np.asarray, pool)  # heddle: noqa HDL005 -- durability copy must outlive the device

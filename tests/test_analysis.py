@@ -75,6 +75,20 @@ def test_hdl004_event_kind_drift_exact_lines():
     ]
 
 
+def test_hdl005_kv_host_gather_exact_lines():
+    assert _hits("hdl005_violations.py") == [
+        ("HDL005", 12),   # jax.tree.map(np.asarray, pool) in migrate_out
+        ("HDL005", 18),   # jax.device_get of a lane in checkpoint_lane
+        ("HDL005", 19),   # np.asarray of the block stack
+    ]
+
+
+def test_hdl005_binds_in_every_scope():
+    """KV transfer discipline is not a control-plane-only concern."""
+    assert _hits("hdl005_violations.py", Scope.NONE) == \
+        _hits("hdl005_violations.py")
+
+
 def test_clean_fixture_has_zero_violations():
     assert _lint("clean.py") == []
 

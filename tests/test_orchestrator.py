@@ -180,13 +180,18 @@ def test_pinned_workload_trace_unchanged_by_lint_fixes():
     (verified against pre-fix code; small dense int ids already iterated in
     ascending set order — the sorted() fix removes the hazard, not current
     behavior).  Any future change to these numbers is a decision-trace
-    change and needs the BENCH_* artifacts regenerated."""
+    change and needs the BENCH_* artifacts regenerated.
+
+    Makespan re-pinned when the paged KV pool landed: migration transfer time
+    is priced from resident-page bytes instead of full-lane bytes, which moves
+    the virtual clock without touching a single decision — the preemption /
+    migration / event counters below are byte-for-byte the pre-paging trace."""
     batch, predictor = build_workbench(n_prompts=6, group_size=4, seed=SEED)
     res = run_on_sim(batch, predictor, n_workers=2,
                      config=RuntimeConfig(scheduler="pps", migration=True,
                                           max_active=2, quantum=8, seed=SEED,
                                           sanitize=True))
-    assert res.makespan == 2.975663591992511
+    assert res.makespan == 2.976646631992511
     assert res.preemptions == 12 and res.migrations == 28
     assert res.events == 604
     assert res.sanitizer["violations"] == 0

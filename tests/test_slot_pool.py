@@ -238,11 +238,13 @@ def test_chunk_window_past_capacity_edge_stays_exact(setup):
     """A fixed-shape chunk whose window hangs past the capacity edge
     (off + chunk_size > capacity while off + length <= capacity) must scatter each
     key to its absolute slot — a clamping slice-write would smear the tail chunk
-    over resident positions."""
+    over resident positions.  Pins the dense (``paged=False``) lane layout the
+    raw-KV comparison below assumes; the paged twin of this edge lives in
+    tests/test_paging.py (page-boundary straddling)."""
     cfg, params = setup
     sampler = SamplerConfig(temperature=1.0, top_p=0.9)
     w = RolloutWorker(cfg, params, capacity=16, max_slots=2, sampler=sampler,
-                      chunk_size=8)
+                      chunk_size=8, paged=False)
     legacy = LegacyRolloutWorker(cfg, params, capacity=16, sampler=sampler)
     for e in (w, legacy):
         e.prefill(1, [5, 7, 9, 11, 13])

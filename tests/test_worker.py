@@ -188,10 +188,11 @@ def test_kv_bytes_stable_across_pool_growth(setup):
     """Regression: kv_bytes reports the per-lane footprint from the lane *shapes*,
     so the figure is identical before and after pool growth (the old computation
     divided the live pool by the current max_slots, tying the answer to growth
-    timing)."""
+    timing).  Pins the dense (``paged=False``) fallback layout — paged lanes
+    price resident pages instead (tests/test_paging.py)."""
     cfg, params = setup
     w = RolloutWorker(cfg, params, capacity=32, max_slots=2,
-                      sampler=SamplerConfig(temperature=0.0))
+                      sampler=SamplerConfig(temperature=0.0), paged=False)
     w.prefill(1, [5, 7])
     before = w.kv_bytes(1)
     w.prefill(2, [5, 9])
